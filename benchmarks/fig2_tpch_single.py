@@ -1,0 +1,43 @@
+"""Paper Fig. 2 (left): TPC-H on a single node.
+
+Compares the CVM-compiled plans (JITQ analogue: fused XLA pipelines) against
+a straightforward numpy executor (the interpreter oracle) per query.
+Emits ``name,us_per_call,derived`` CSV rows.
+"""
+
+import time
+
+import numpy as np
+
+
+def bench(sf: float = 0.01, reps: int = 3):
+    from repro.relational import tpch
+
+    tables = tpch.generate(sf=sf, seed=0)
+    ctx = tpch.make_context(tables)
+    rows = []
+    for qname in sorted(tpch.QUERIES):
+        frame = tpch.QUERIES[qname](ctx)
+        compiled = ctx.compile(frame)
+        sources = ctx.sources()
+        compiled(sources)  # compile/warm-up
+        t0 = time.time()
+        for _ in range(reps):
+            out = compiled(sources)
+        jax_us = (time.time() - t0) / reps * 1e6
+
+        t0 = time.time()
+        for _ in range(reps):
+            tpch.REFERENCES[qname](tables)
+        np_us = (time.time() - t0) / reps * 1e6
+        rows.append((f"fig2_tpch_{qname}", jax_us, f"numpy_ref_us={np_us:.0f};speedup={np_us/jax_us:.2f}"))
+    return rows
+
+
+def main():
+    for name, us, derived in bench():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Paper Fig. 4: serverless elasticity (Lambada analogue).
+
+The serverless trade: spin up as many workers as the latency target needs
+and pay worker-seconds.  Here the elastic axis is the mesh worker count —
+the same query is re-planned at 1/2/4/8 workers; we report latency and the
+worker-seconds cost model, plus an elastic *shrink* event (8 → 4 workers,
+i.e. losing half the fleet) that re-plans without touching the frontend
+program — the CVM portability claim in miniature.
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+
+
+def bench(sf: float = 0.02, reps: int = 3):
+    from repro.backends.spmd import SpmdBackend
+    from repro.core.passes import Parallelize
+    from repro.core.passes.lower_vec import LowerRelToVec
+    from repro.launch.mesh import make_mesh
+    from repro.relational import tpch
+
+    tables = tpch.generate(sf=sf, seed=0)
+    ctx = tpch.make_context(tables, pad_to=8 * 128)
+    frame = tpch.QUERIES["q6"](ctx)
+    sources = ctx.sources()
+
+    rows = []
+    base_us = None
+    for workers in [1, 2, 4, 8]:
+        program = frame.program("q6")
+        if workers > 1:
+            program = Parallelize(n=workers).apply(program)
+        program = LowerRelToVec(ctx.catalog()).apply(program)
+        if workers > 1:
+            mesh = make_mesh((workers,), ("workers",))
+            compiled = SpmdBackend(mesh).compile(program)
+        else:
+            from repro.backends.local import LocalBackend
+            compiled = LocalBackend().compile(program)
+        compiled(sources)
+        t0 = time.time()
+        for _ in range(reps):
+            compiled(sources)
+        us = (time.time() - t0) / reps * 1e6
+        base_us = base_us or us
+        cost = us * workers / 1e6  # worker-seconds (the Fig. 4 cost axis)
+        rows.append((f"fig4_elastic_q6_w{workers}", us,
+                     f"worker_seconds={cost:.4f};scaling_eff={base_us/(us*workers):.2f}"))
+
+    # elastic shrink event: the 8-worker plan's mesh loses a pod → re-plan at 4
+    t0 = time.time()
+    program = Parallelize(n=4).apply(frame.program("q6"))
+    program = LowerRelToVec(ctx.catalog()).apply(program)
+    compiled = SpmdBackend(make_mesh((4,), ("workers",))).compile(program)
+    compiled(sources)
+    replan_us = (time.time() - t0) * 1e6
+    rows.append(("fig4_elastic_replan_8to4", replan_us, "event=worker_loss;replanned=yes"))
+    return rows
+
+
+def main():
+    for name, us, derived in bench():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Stepwise perf attribution on the three hillclimb cells.
+
+Runs each cell under four configurations (subprocesses — env toggles must
+precede jax init):
+
+  base  : paper-faithful (f32 attention, repeat-KV decode, no donation)
+  +A    : + buffer donation                        (memory capacity)
+  +AB   : + bf16 attention matmuls                 (compute/memory terms)
+  +ABC  : + grouped-head decode (no KV repeat)     (collective term)
+
+Results → artifacts/perf_steps/<cell>__<step>.json and a markdown table on
+stdout.  Usage: PYTHONPATH=src:. python benchmarks/perf_steps.py
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT = ROOT / "artifacts" / "perf_steps"
+
+CELLS = [
+    ("mixtral-8x7b", "train_4k"),
+    ("qwen2-1.5b", "decode_32k"),
+    ("granite-34b", "train_4k"),
+]
+
+STEPS = {
+    # base..ABC keep the replicated grad accumulator (pre-ZeRO-2 semantics)
+    "base": {"REPRO_NO_DONATE": "1", "REPRO_ATTN_F32": "1",
+             "REPRO_DECODE_REPEAT": "1", "REPRO_NO_ZERO2": "1"},
+    "A_donate": {"REPRO_ATTN_F32": "1", "REPRO_DECODE_REPEAT": "1",
+                 "REPRO_NO_ZERO2": "1"},
+    "AB_bf16attn": {"REPRO_DECODE_REPEAT": "1", "REPRO_NO_ZERO2": "1"},
+    "ABC_groupdecode": {"REPRO_NO_ZERO2": "1"},
+    # D: mask-based cache write (decode cells; no-op for train)
+    "D_maskwrite": {"REPRO_NO_ZERO2": "1"},
+    # E: + ZeRO-2 sharded gradient accumulator (train cells)
+    "E_zero2accum": {},
+}
+
+SCRIPT = """
+import os
+{env_lines}
+import json, sys
+from repro.launch.dryrun import run_cell
+rec = run_cell("{arch}", "{shape}", multi_pod=False, save=False, verbose=False,
+               probes={probes})
+print("REC" + json.dumps(rec, default=str))
+"""
+
+
+def run(arch, shape, step, env_over, probes=True):
+    env_lines = "\n".join(f'os.environ["{k}"] = "{v}"' for k, v in env_over.items())
+    code = SCRIPT.format(env_lines=env_lines, arch=arch, shape=shape,
+                         probes=probes)
+    env = {"PYTHONPATH": f"{ROOT}/src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=3000, env=env)
+    if proc.returncode != 0:
+        return {"error": proc.stderr.strip().splitlines()[-1] if proc.stderr else "?"}
+    line = [l for l in proc.stdout.splitlines() if l.startswith("REC")][0]
+    return json.loads(line[3:])
+
+
+def main():
+    OUT.mkdir(parents=True, exist_ok=True)
+    for arch, shape in CELLS:
+        for step, env_over in STEPS.items():
+            out = OUT / f"{arch}__{shape}__{step}.json"
+            if out.exists():
+                print(f"[perf] {arch}×{shape} {step}: cached", flush=True)
+                continue
+            rec = run(arch, shape, step, env_over)
+            out.write_text(json.dumps(rec, indent=2, default=str))
+            keys = ("device_mem_gib", "t_compute_s", "t_memory_s", "t_collective_s",
+                    "roofline_fraction")
+            vals = {k: rec.get(k) for k in keys}
+            print(f"[perf] {arch}×{shape} {step}: {vals}", flush=True)
+
+    # markdown table
+    print("\n| cell | step | GiB/dev | t_compute | t_memory | t_collective | roofline |")
+    print("|---|---|---|---|---|---|---|")
+    for arch, shape in CELLS:
+        for step in STEPS:
+            f = OUT / f"{arch}__{shape}__{step}.json"
+            if not f.exists():
+                continue
+            r = json.loads(f.read_text())
+            if "error" in r:
+                print(f"| {arch}×{shape} | {step} | ERROR |  |  |  |  |")
+                continue
+            print(f"| {arch}×{shape} | {step} | {r.get('device_mem_gib','')} "
+                  f"| {r.get('t_compute_s', 0):.3e} | {r.get('t_memory_s', 0):.3e} "
+                  f"| {r.get('t_collective_s', 0):.3e} "
+                  f"| {r.get('roofline_fraction', 0):.4f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Roofline aggregation: artifacts/dryrun/*.json → §Roofline table.
+
+Per (arch × shape) on the single-pod mesh: the three terms in seconds, the
+dominant bottleneck, MODEL_FLOPS, useful fraction, roofline fraction, and a
+one-line "what would move the dominant term".  Also emits bench CSV rows.
+"""
+
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+HINTS = {
+    ("compute",): "raise per-chip math: bf16-cast matmuls, fewer f32 casts, larger per-device tiles",
+    ("memory",): "cut bytes: fuse attention (Pallas), bf16 activations, fewer remat passes, larger microbatch",
+    ("collective",): "cut comm: overlap psum with compute, reduce-scatter grads (ZeRO), avoid KV-head replication",
+}
+
+
+def load(mesh: str = "16x16"):
+    rows = []
+    for p in sorted(ARTIFACTS.glob(f"*__{mesh}.json")):
+        rec = json.loads(p.read_text())
+        rows.append(rec)
+    return rows
+
+
+def table(mesh: str = "16x16"):
+    rows = load(mesh)
+    out = []
+    for r in rows:
+        if "skipped" in r:
+            out.append((r["arch"], r["shape"], "SKIP", r["skipped"]))
+            continue
+        if "t_compute_s" not in r:
+            continue
+        dom = r["dominant"]
+        out.append((
+            r["arch"], r["shape"],
+            f"{r['t_compute_s']:.3e}", f"{r['t_memory_s']:.3e}",
+            f"{r['t_collective_s']:.3e}", dom,
+            f"{r['model_flops_global']:.3e}", f"{r['useful_fraction']:.3f}",
+            f"{r['roofline_fraction']:.4f}", f"{r.get('device_mem_gib', 0):.2f}",
+            HINTS[(dom,)],
+        ))
+    return out
+
+
+def markdown(mesh: str = "16x16") -> str:
+    hdr = ("| arch | shape | t_compute | t_memory | t_collective | dominant | "
+           "MODEL_FLOPS | useful | roofline | GiB/dev | to improve |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for row in table(mesh):
+        if row[2] == "SKIP":
+            lines.append(f"| {row[0]} | {row[1]} | SKIP — {row[3]} |" + " |" * 8)
+        else:
+            lines.append("| " + " | ".join(str(x) for x in row) + " |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = load()
+    for r in rows:
+        if "skipped" in r or "t_compute_s" not in r:
+            continue
+        tmax = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        print(f"roofline_{r['arch']}_{r['shape']},{tmax*1e6:.1f},"
+              f"dominant={r['dominant']};roofline_frac={r['roofline_fraction']:.4f};"
+              f"useful={r['useful_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark orchestrator — one function per paper figure/table.
+
+Each figure runs in its own subprocess (fig3/fig4 need their own
+``XLA_FLAGS`` device counts, which jax locks at first init).  Prints
+``name,us_per_call,derived`` CSV.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+import argparse
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+FIGS = [
+    ("fig2_tpch_single", "benchmarks.fig2_tpch_single"),
+    ("fig2_kmeans", "benchmarks.fig2_kmeans"),
+    ("fig3_tpch_parallel", "benchmarks.fig3_tpch_parallel"),
+    ("fig4_elastic", "benchmarks.fig4_elastic"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def run_fig(module: str, timeout: int = 1800) -> str:
+    env = {
+        "PYTHONPATH": f"{ROOT}/src:{ROOT}",
+        "PATH": "/usr/bin:/bin",
+        "HOME": "/root",
+    }
+    proc = subprocess.run([sys.executable, "-m", module], capture_output=True,
+                          text=True, timeout=timeout, env=env, cwd=str(ROOT))
+    if proc.returncode != 0:
+        return f"{module},ERROR,{proc.stderr.strip().splitlines()[-1] if proc.stderr else 'unknown'}"
+    return proc.stdout.strip()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    for name, module in FIGS:
+        if args.only and args.only not in name:
+            continue
+        out = run_fig(module)
+        for line in out.splitlines():
+            if line and "," in line:
+                print(line)
+
+
+if __name__ == "__main__":
+    main()

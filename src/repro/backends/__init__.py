@@ -1,0 +1,12 @@
+"""Execution backends.
+
+* ``interp``  — numpy reference interpreter: the executable semantics of the
+  abstract Collection Virtual Machine.  Slow, exact, the oracle for every
+  rewriting test ("transformations must preserve behaviour *as if executed
+  on that machine*").
+* ``local``   — JITQ analogue: lower pipelines to XLA via ``jax.jit`` on a
+  single device.
+* ``spmd``    — Modularis analogue: ``mesh.*`` flavor lowered to
+  ``jax.shard_map`` + ``jax.lax`` collectives over a device mesh.
+* ``multipod``— Lambada analogue: adds the elastic "pod" axis.
+"""

@@ -1,0 +1,61 @@
+"""Multi-pod / elastic backend — the Lambada analogue.
+
+Lambada's trade is elasticity: pick the worker count per query, pay for
+worker-seconds, survive workers vanishing.  On TPU the elastic unit is the
+pod ("pod" mesh axis, DCN-connected).  This facade owns that lifecycle:
+
+  * ``plan(workers)`` compiles the frontend program for a given worker
+    count (re-running the parallelization rewrite — the program is
+    re-planned, never re-written by hand);
+  * ``on_resize(new_workers)`` re-plans after an ElasticEvent (pod loss /
+    scale-up) — compiled plans are cached per worker count;
+  * state (for training jobs) moves across topologies via the placement-
+    agnostic checkpoints in ``distributed.checkpoint``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+from ..core.passes import Parallelize
+from ..core.passes.lower_vec import Catalog, LowerRelToVec
+from ..core.program import Program
+from ..launch.mesh import make_mesh
+from .local import LocalBackend
+from .spmd import SpmdBackend
+
+
+@dataclass
+class ElasticExecutor:
+    """Plan-per-topology executor for CVM programs."""
+
+    program_builder: Callable[[], Program]   # frontend program (re-buildable)
+    catalog: Catalog
+    axis: str = "workers"
+    use_kernels: bool = False
+    _plans: Dict[int, Any] = field(default_factory=dict)
+    workers: int = 1
+
+    def plan(self, workers: int):
+        if workers in self._plans:
+            return self._plans[workers]
+        program = self.program_builder()
+        if workers > 1:
+            program = Parallelize(n=workers).apply(program)
+        program = LowerRelToVec(self.catalog).apply(program)
+        if workers > 1:
+            mesh = make_mesh((workers,), (self.axis,))
+            compiled = SpmdBackend(mesh, axis=self.axis,
+                                   use_kernels=self.use_kernels).compile(program)
+        else:
+            compiled = LocalBackend(use_kernels=self.use_kernels).compile(program)
+        self._plans[workers] = compiled
+        return compiled
+
+    def run(self, sources, *args):
+        return self.plan(self.workers)(sources, *args)
+
+    def on_resize(self, new_workers: int) -> None:
+        """Elastic event: pod lost or fleet grown — next run uses the new plan."""
+        self.workers = new_workers

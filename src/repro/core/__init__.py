@@ -1,0 +1,23 @@
+"""CVM core: the IR language (types, programs, registry, verifier, passes).
+
+Public surface::
+
+    from repro.core import (
+        types, expr,               # the grammar + expressions
+        Builder, Program, Instruction, Register,
+        verify, register_op,
+    )
+
+Importing ``repro.core`` loads the standard IR flavors (cf/df/rel/la/vec/
+mesh/tz) into the registry.
+"""
+
+from . import types, expr  # noqa: F401
+from .program import Builder, Instruction, Program, Register, subprogram  # noqa: F401
+from .registry import (  # noqa: F401
+    OpSpec, ensure_flavors_loaded, infer_output_types, lookup, op, register_op,
+    registered_opcodes, require,
+)
+from .verify import VerificationError, verify  # noqa: F401
+
+ensure_flavors_loaded()

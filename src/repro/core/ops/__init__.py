@@ -1,0 +1,14 @@
+"""Standard IR flavors.
+
+Importing this package registers the standard opcode vocabularies:
+
+  * ``cf.*``   control-flow-like higher-order instructions (paper Table 2 mid)
+  * ``df.*``   generic dataflow frontend flavor
+  * ``rel.*``  relational flavor (Select/Proj/ExProj/Aggr/Join/...)
+  * ``la.*``   linear-algebra flavor (MMMult, ...)
+  * ``vec.*``  physical vector flavor (ScanVec/SplitVec/BuildHTable/...)
+  * ``mesh.*`` SPMD mesh backend flavor (MeshExecute/AllReduce/Exchange/...)
+  * ``tz.*``   tensor/step-pipeline flavor used by the LM stack
+"""
+
+from . import controlflow, dataflow, linalg, mesh, relational, tensor, vec  # noqa: F401

@@ -1,0 +1,238 @@
+"""Physical vector flavor (paper Table 2, bottom): backend building blocks.
+
+Low-level philosophy (paper §3.4): operators as small as possible —
+"cleverness as a sophisticated combination of simple operators".  Physical
+collections are ``Vec``s: padded fixed-capacity column blocks with a count
+(static shapes are the TPU adaptation; see DESIGN.md §2).
+
+``BuildHTable``/``ProbeHTable`` exist for IR completeness (they are the
+paper's canonical low-level pair); the TPU backend *rewrites* them into
+sort/searchsorted sequences because random scatter is not MXU-friendly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping, Sequence, Tuple
+
+from ..expr import AggSpec, Expr
+from ..registry import op
+from ..types import (
+    BAG, SEQ,
+    Atom, CollectionType, HTab, I32, ItemType, Single, TupleType, Vec, is_coll,
+)
+from .controlflow import split_type
+from .relational import join_schema
+
+
+def _vec(t: ItemType) -> CollectionType:
+    if not is_coll(t) or t.kind.name != "Vec":
+        raise TypeError(f"expected Vec, got {t.render()}")
+    return t  # type: ignore[return-value]
+
+
+def _cap(t: CollectionType) -> int:
+    c = t.attr("max_count")
+    if c is None:
+        raise TypeError(f"Vec without static capacity: {t.render()}")
+    return int(c)
+
+
+@op("vec.ScanVec", source=True)
+def _scanvec(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """ScanVec(table, schema, max_count) → Vec⟨T⟩ — materialized column block."""
+    return [Vec(params["schema"], params["max_count"])]
+
+
+@op("vec.MatVec")
+def _matvec(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """MatVec()(C) → Vec — materialize any collection into a vector block."""
+    (c,) = ins
+    if not is_coll(c):
+        raise TypeError("MatVec of non-collection")
+    cap = params.get("max_count") or c.attr("max_count")
+    return [Vec(c.item, cap)]
+
+
+@op("vec.SplitVec")
+def _splitvec(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """SplitVec(n)(Vec⟨I⟩) → Seq[n]⟨Vec⟨I⟩⟩ — even range partition."""
+    v = _vec(ins[0])
+    n = int(params["n"])
+    cap = _cap(v)
+    if cap % n != 0:
+        raise TypeError(f"SplitVec: capacity {cap} not divisible by {n}")
+    return [split_type(Vec(v.item, cap // n), n)]
+
+
+@op("vec.ConcatVec")
+def _concatvec(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """ConcatVec()(Seq[n]⟨Vec⟨I⟩⟩) → Vec⟨I⟩."""
+    (s,) = ins
+    if not is_coll(s, SEQ) or not is_coll(s.item):
+        raise TypeError("ConcatVec of non-split vec")
+    inner = _vec(s.item)
+    n = s.attr("n")
+    return [Vec(inner.item, _cap(inner) * int(n))]
+
+
+@op("vec.MaskSelect", elementwise=True)
+def _maskselect(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """MaskSelect(pred)(Vec⟨T⟩) → Vec⟨T⟩ — late-materialized (predicated) select.
+
+    Capacity unchanged; only the validity mask is narrowed.  This is the TPU
+    analogue of the paper's "predicated scan" low-level technique.
+    """
+    v = _vec(ins[0])
+    pred: Expr = params["pred"]
+    if pred.infer(v.schema).domain != "bool":
+        raise TypeError("MaskSelect predicate not boolean")
+    return [v]
+
+
+@op("vec.Compact")
+def _compact(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """Compact()(Vec⟨T⟩) → Vec⟨T⟩ — densify valid rows to the front.
+
+    Inserted by the selectivity-aware rewrite when a selective filter pays
+    for the shuffle (sort by ~validity).
+    """
+    v = _vec(ins[0])
+    cap = params.get("max_count")
+    return [Vec(v.item, int(cap) if cap else _cap(v))]
+
+
+@op("vec.ProjVec", elementwise=True)
+def _projvec(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """ProjVec(names)(Vec⟨T⟩) → Vec⟨T'⟩ — drop columns (free: layout is SoA)."""
+    v = _vec(ins[0])
+    return [Vec(v.schema.project(tuple(params["names"])), _cap(v))]
+
+
+@op("vec.ExProjVec", elementwise=True)
+def _exprojvec(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """ExProjVec(exprs)(Vec⟨T⟩) → Vec⟨T'⟩ — compute new columns."""
+    v = _vec(ins[0])
+    exprs: Tuple[Tuple[str, Expr], ...] = tuple(params["exprs"])
+    fields = tuple((n, e.infer(v.schema)) for n, e in exprs)
+    return [Vec(TupleType(fields), _cap(v))]
+
+
+@op("vec.AggrVec", aggregation={"kind": "scalar"})
+def _aggrvec(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """AggrVec(aggs)(Vec⟨T⟩) → Single⟨aggs⟩ — masked block aggregation."""
+    v = _vec(ins[0])
+    aggs: Tuple[AggSpec, ...] = tuple(params["aggs"])
+    fields = tuple((a.name, a.result_atom(v.schema)) for a in aggs)
+    return [Single(TupleType(fields))]
+
+
+@op("vec.FusedSelectAgg", aggregation={"kind": "scalar"})
+def _fused_select_agg(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """FusedSelectAgg(pred, aggs)(Vec⟨T⟩) → Single⟨aggs⟩.
+
+    Single-pass select+project+aggregate pipeline — the shape JITQ compiles
+    TPC-H Q6 into.  Lowered to the ``fused_select_agg`` Pallas kernel.
+    """
+    v = _vec(ins[0])
+    pred: Expr = params["pred"]
+    if pred.infer(v.schema).domain != "bool":
+        raise TypeError("FusedSelectAgg predicate not boolean")
+    aggs: Tuple[AggSpec, ...] = tuple(params["aggs"])
+    fields = tuple((a.name, a.result_atom(v.schema)) for a in aggs)
+    return [Single(TupleType(fields))]
+
+
+@op("vec.FinalizeSingle")
+def _finalize_single(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """FinalizeSingle(exprs)(Single⟨T⟩) → Single⟨T'⟩ — scalar post-arithmetic.
+
+    Finalizes decomposed aggregates (avg = sum/count, ratios, ...)."""
+    (s,) = ins
+    if not is_coll(s) or s.kind.name != "Single":
+        raise TypeError(f"FinalizeSingle of non-Single {s.render()}")
+    exprs: Tuple[Tuple[str, Expr], ...] = tuple(params["exprs"])
+    fields = tuple((n, e.infer(s.schema)) for n, e in exprs)
+    return [Single(TupleType(fields))]
+
+
+@op("vec.SortByKey")
+def _sortbykey(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """SortByKey(keys)(Vec⟨T⟩) → Vec⟨T⟩ (valid rows first, stable)."""
+    v = _vec(ins[0])
+    return [v.with_kind(v.kind)]
+
+
+@op("vec.GroupAggSorted", aggregation={"kind": "grouped"})
+def _groupagg_sorted(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """GroupAggSorted(keys, aggs, max_groups)(Vec⟨T⟩) → Vec⟨keys+aggs⟩.
+
+    Grouped aggregation over key-sorted input via segment reduction — the
+    TPU-native replacement for hash aggregation (lowered to the ``segsum``
+    Pallas kernel for the numeric part).
+    """
+    v = _vec(ins[0])
+    keys: Tuple[str, ...] = tuple(params["keys"])
+    aggs: Tuple[AggSpec, ...] = tuple(params["aggs"])
+    fields = tuple((k, v.schema.field(k)) for k in keys)
+    fields += tuple((a.name, a.result_atom(v.schema)) for a in aggs)
+    return [Vec(TupleType(fields), int(params["max_groups"]))]
+
+
+@op("vec.BuildHTable")
+def _buildhtable(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """BuildHTable()(Vec⟨T⟩) → Single⟨HTab⟨T⟩⟩ (keys = params['keys'])."""
+    v = _vec(ins[0])
+    return [Single(HTab(v.item))]
+
+
+@op("vec.ProbeHTable")
+def _probehtable(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """ProbeHTable(left_on, right_on, max_count)(Vec⟨T1⟩, Single⟨HTab⟨T2⟩⟩) → Vec⟨T3⟩."""
+    probe = _vec(ins[0])
+    ht = ins[1]
+    if not is_coll(ht) or not is_coll(ht.item):
+        raise TypeError("ProbeHTable second input must be Single⟨HTab⟩")
+    build_item = ht.item.item
+    schema = join_schema(probe.schema, build_item, tuple(params["left_on"]), tuple(params["right_on"]))
+    return [Vec(schema, int(params["max_count"]))]
+
+
+@op("vec.MergeJoinSorted")
+def _mergejoin(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """MergeJoinSorted(left_on, right_on, max_count)(Vec⟨L⟩, Vec⟨R⟩) → Vec⟨L⋈R⟩.
+
+    Sort-based equi-join (searchsorted + gather) — the TPU-native rewrite
+    target of BuildHTable+ProbeHTable.  ``max_count`` is the static output
+    bound (for FK joins: the probe-side capacity).
+    """
+    l, r = _vec(ins[0]), _vec(ins[1])
+    schema = join_schema(l.schema, r.schema, tuple(params["left_on"]), tuple(params["right_on"]))
+    return [Vec(schema, int(params["max_count"]))]
+
+
+@op("vec.LimitVec")
+def _limitvec(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """LimitVec(k)(Vec⟨T⟩) → Vec⟨T⟩ — keep the first k valid rows."""
+    v = _vec(ins[0])
+    return [v]
+
+
+@op("vec.TopKVec")
+def _topk(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """TopKVec(keys, ascending, k)(Vec⟨T⟩) → Vec⟨T⟩[k]."""
+    v = _vec(ins[0])
+    return [Vec(v.item, int(params["k"]))]
+
+
+@op("vec.HistogramPartition")
+def _histpart(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """HistogramPartition(key, n)(Vec⟨T⟩) → Seq[n]⟨Vec⟨T⟩⟩.
+
+    Radix/range partition by key — the building block of the distributed
+    Exchange (paper: MPIHistogram + MPIExchange).  Per-partition capacity is
+    the full input capacity (worst-case skew) unless ``per_cap`` given.
+    """
+    v = _vec(ins[0])
+    n = int(params["n"])
+    cap = int(params.get("per_cap") or _cap(v))
+    return [split_type(Vec(v.item, cap), n)]

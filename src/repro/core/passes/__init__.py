@@ -1,0 +1,14 @@
+"""Rewriting passes over CVM programs.
+
+The rewriting mechanism is "highly flexible and configurable, such that
+every frontend/backend combination can do the rewritings that are best
+suited for that combination" (paper §3.6).  Passes must work in the
+presence of collection types and instructions of *any* flavor: rules that
+don't understand an instruction leave it as is.
+"""
+
+from .rewriter import InstructionRule, Pass, PassManager, ProgramRule  # noqa: F401
+from .dce import DeadCodeElimination  # noqa: F401
+from .cse import CommonSubexpressionElimination  # noqa: F401
+from .parallelize import Parallelize  # noqa: F401
+from .fusion import FuseKMeansStep, FuseSelectAgg  # noqa: F401

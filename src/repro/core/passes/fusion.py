@@ -1,0 +1,117 @@
+"""Fusion rewrites: combine producer-consumer chains into fused operators.
+
+This is the paper's pipeline extraction in miniature: tree-shaped data paths
+collapse into single instructions that the backend JIT-compiles as one unit
+(here: a Pallas kernel or one XLA fusion).
+
+* ``FuseSelectAgg`` — ``MaskSelect → [ExProjVec] → AggrVec`` becomes
+  ``vec.FusedSelectAgg`` (the single-pass shape JITQ compiles TPC-H Q6 into).
+* ``FuseKMeansStep`` — ``CDist2 → ArgMinRow → SegSum + SegCount`` becomes
+  ``la.KMeansStep`` (the "run-based aggregation" plan analysis the paper
+  credits for matching hand-written C++ k-means).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from ..expr import AggSpec, Const, Expr, col, substitute
+from ..program import Instruction, Program
+from ..types import BOOL
+from .rewriter import ProgramRule
+
+TRUE = Const(True, BOOL)
+
+
+class FuseSelectAgg(ProgramRule):
+    name = "fuse-select-agg"
+
+    def run(self, program: Program) -> Optional[Program]:
+        producers = program.producers()
+
+        for y in program.body:
+            if y.opcode != "vec.AggrVec":
+                continue
+            aggs = tuple(y.param("aggs"))
+            src = y.inputs[0]
+            chain: List[Instruction] = []
+            exprs_map: Dict[str, Expr] = {}
+            pred: Expr = TRUE
+
+            cur = producers.get(src.name)
+            # optional ExProj directly below the Aggr
+            if cur is not None and cur.opcode == "vec.ExProjVec" and program.uses(cur.outputs[0]) == 1:
+                exprs_map = {n: e for n, e in cur.param("exprs")}
+                chain.append(cur)
+                cur = producers.get(cur.inputs[0].name)
+            # optional MaskSelect below that
+            if cur is not None and cur.opcode == "vec.MaskSelect" and program.uses(cur.outputs[0]) == 1:
+                pred = cur.param("pred")
+                chain.append(cur)
+                cur = producers.get(cur.inputs[0].name)
+
+            if not chain:
+                continue
+            base = chain[-1].inputs[0]
+            fused_aggs = tuple(
+                AggSpec(a.fn, substitute(a.expr, exprs_map), a.name) for a in aggs
+            )
+            fused = Instruction(
+                "vec.FusedSelectAgg",
+                (base,),
+                y.outputs,
+                (("pred", pred), ("aggs", fused_aggs)),
+            )
+            dead = {id(c) for c in chain} | {id(y)}
+            new_body = [fused if ins is y else ins for ins in program.body if id(ins) not in dead or ins is y]
+            return program.with_body(new_body)
+        return None
+
+
+class FuseKMeansStep(ProgramRule):
+    name = "fuse-kmeans-step"
+
+    def run(self, program: Program) -> Optional[Program]:
+        producers = program.producers()
+
+        segsum = segcount = None
+        for ins in program.body:
+            if ins.opcode == "la.SegSum":
+                segsum = ins
+            if ins.opcode == "la.SegCount":
+                segcount = ins
+        if segsum is None or segcount is None:
+            return None
+
+        lab = segsum.inputs[1]
+        if segcount.inputs[0].name != lab.name:
+            return None
+        argmin = producers.get(lab.name)
+        if argmin is None or argmin.opcode != "la.ArgMinRow":
+            return None
+        if program.uses(argmin.outputs[0]) != 2:
+            return None
+        cdist = producers.get(argmin.inputs[0].name)
+        if cdist is None or cdist.opcode != "la.CDist2":
+            return None
+        if program.uses(cdist.outputs[0]) != 1:
+            return None
+        x, c = cdist.inputs
+        if segsum.inputs[0].name != x.name:
+            return None
+
+        fused = Instruction(
+            "la.KMeansStep",
+            (x, c),
+            (segsum.outputs[0], segcount.outputs[0]),
+        )
+        dead = {id(cdist), id(argmin), id(segcount)}
+        new_body = []
+        for ins in program.body:
+            if id(ins) in dead:
+                continue
+            if ins is segsum:
+                new_body.append(fused)
+                continue
+            new_body.append(ins)
+        return program.with_body(new_body)

@@ -1,0 +1,147 @@
+"""Lowering rewrite: abstract relational flavor → physical vec flavor.
+
+This pass *changes the IR flavor* of a program (paper §3.1: "during the
+rewriting, the program may change the IR flavor several times").  Because
+physical types carry static capacities, the program is reconstructed
+through a Builder so every register is re-typed by the typing rules.
+
+Catalog decisions made here (the "physical optimizer"):
+  * table scans get static capacities from the catalog;
+  * GroupByAggr → SortByKey + GroupAggSorted(max_groups);
+  * Join → SortByKey(build side) + MergeJoinSorted (sort-based PK-FK join —
+    the TPU-native rewrite of BuildHTable/ProbeHTable, DESIGN.md §2);
+  * higher-order instructions are reconstructed recursively with re-derived
+    chunk types.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Mapping, Optional, Sequence
+
+from ..program import Builder, Instruction, Program, Register
+from ..types import ItemType
+
+
+@dataclass
+class Catalog:
+    """Physical metadata for lowering."""
+
+    capacities: Dict[str, int] = field(default_factory=dict)
+    default_max_groups: int = 1024
+    join_selectivity: float = 1.0  # output-capacity factor for joins
+
+    def capacity(self, table: str) -> int:
+        if table not in self.capacities:
+            raise KeyError(f"catalog has no capacity for table {table!r}")
+        return self.capacities[table]
+
+
+class LowerRelToVec:
+    """Not a fixpoint rule: a single whole-program reconstruction."""
+
+    name = "lower-rel-to-vec"
+
+    def __init__(self, catalog: Catalog) -> None:
+        self.catalog = catalog
+
+    def apply(self, program: Program, input_types: Optional[Sequence[ItemType]] = None) -> Program:
+        return self._lower(program, list(input_types or []) or None)
+
+    # ------------------------------------------------------------------
+    def _lower(self, program: Program, new_input_types: Optional[List[ItemType]]) -> Program:
+        b = Builder(program.name, prefix="v")
+        regmap: Dict[str, Register] = {}
+        for i, r in enumerate(program.inputs):
+            t = new_input_types[i] if new_input_types else r.type
+            regmap[r.name] = b.input(r.name, t)
+
+        for ins in program.body:
+            new_ins = [regmap[r.name] for r in ins.inputs]
+            outs = self._lower_instruction(b, ins, new_ins)
+            if len(outs) != len(ins.outputs):
+                raise AssertionError(f"lowering {ins.opcode}: arity changed")
+            for old, new in zip(ins.outputs, outs):
+                regmap[old.name] = new
+
+        return b.finish(*[regmap[r.name] for r in program.results])
+
+    # ------------------------------------------------------------------
+    def _lower_instruction(self, b: Builder, ins: Instruction,
+                           inputs: List[Register]) -> Sequence[Register]:
+        params = dict(ins.params)
+        op = ins.opcode
+
+        if op == "rel.Scan":
+            return b.emit("vec.ScanVec", [], {
+                "table": params["table"],
+                "schema": params["schema"],
+                "max_count": self.catalog.capacity(params["table"]),
+            })
+        if op == "rel.Select":
+            return b.emit("vec.MaskSelect", inputs, {"pred": params["pred"]})
+        if op == "rel.Proj":
+            return b.emit("vec.ProjVec", inputs, {"names": tuple(params["names"])})
+        if op == "rel.ExProj":
+            if inputs[0].type.kind.name == "Single":
+                return b.emit("vec.FinalizeSingle", inputs, {"exprs": tuple(params["exprs"])})
+            return b.emit("vec.ExProjVec", inputs, {"exprs": tuple(params["exprs"])})
+        if op == "rel.Aggr":
+            return b.emit("vec.AggrVec", inputs, {"aggs": tuple(params["aggs"])})
+        if op == "rel.GroupByAggr":
+            keys = tuple(params["keys"])
+            mg = int(params.get("max_groups") or self.catalog.default_max_groups)
+            s = b.emit1("vec.SortByKey", inputs, {"keys": keys})
+            return b.emit("vec.GroupAggSorted", [s], {
+                "keys": keys, "aggs": tuple(params["aggs"]), "max_groups": mg,
+            })
+        if op == "rel.Join":
+            left, right = inputs
+            right_on = tuple(params["right_on"])
+            left_cap = left.type.attr("max_count")
+            out_cap = int(left_cap * self.catalog.join_selectivity)
+            rs = b.emit1("vec.SortByKey", [right], {"keys": right_on})
+            return b.emit("vec.MergeJoinSorted", [left, rs], {
+                "left_on": tuple(params["left_on"]),
+                "right_on": right_on,
+                "max_count": out_cap,
+            })
+        if op == "rel.OrderBy":
+            keys = tuple(params["keys"])
+            asc = tuple(params.get("ascending") or (True,) * len(keys))
+            return b.emit("vec.SortByKey", inputs, {"keys": keys, "ascending": asc})
+        if op == "rel.Limit":
+            return b.emit("vec.LimitVec", inputs, {"k": int(params["k"])})
+        if op == "rel.CombinePartials":
+            return b.emit(op, inputs, params)
+
+        # higher-order instructions: reconstruct nested programs with the
+        # chunk types of the (already lowered) new inputs
+        if op in ("cf.ConcurrentExecute", "mesh.MeshExecute"):
+            p: Program = params["P"]
+            chunk_types = [r.type.item for r in inputs]
+            params["P"] = self._lower(p, chunk_types)
+            return b.emit(op, inputs, params)
+        if op in ("cf.Loop", "cf.While"):
+            p = params["P"]
+            params["P"] = self._lower(p, [r.type for r in inputs])
+            return b.emit(op, inputs, params)
+        if op == "cf.Cond":
+            then_types = [r.type for r in inputs[1:]]
+            params["Pthen"] = self._lower(params["Pthen"], then_types)
+            params["Pelse"] = self._lower(params["Pelse"], then_types)
+            return b.emit(op, inputs, params)
+        if op == "cf.Call":
+            params["P"] = self._lower(params["P"], [r.type for r in inputs])
+            return b.emit(op, inputs, params)
+        if op == "df.Map":
+            p = params["P"]
+            params["P"] = self._lower(p, [inputs[0].type.item])
+            return b.emit(op, inputs, params)
+
+        # default: re-emit unchanged (cf.Split/Merge/Broadcast/CombineChunks,
+        # la.*, unknown flavors) — typing rules recompute the physical types
+        from .. import registry
+        if registry.lookup(op) is None:
+            return b.emit(op, inputs, params, out_types=[o.type for o in ins.outputs])
+        return b.emit(op, inputs, params)

@@ -1,0 +1,3 @@
+"""Deterministic, shardable, resumable synthetic data pipeline."""
+
+from .pipeline import TokenPipeline  # noqa: F401

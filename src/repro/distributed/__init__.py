@@ -1,0 +1,4 @@
+"""Distributed substrate: checkpointing, fault tolerance, compression."""
+
+from .checkpoint import CheckpointManager  # noqa: F401
+from .fault import StepRunner  # noqa: F401

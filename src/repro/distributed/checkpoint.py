@@ -1,0 +1,133 @@
+"""Sharded, atomic, elastic checkpointing (no external deps).
+
+Layout::
+
+    <dir>/step_<N>/
+        manifest.json        # tree structure, shapes, dtypes, shard map, hashes
+        shard_<i>.npz        # leaf arrays, chunked along dim 0 per shard
+
+Properties needed at 1000+ nodes:
+  * **atomic**: written to ``step_<N>.tmp`` then os.rename'd — a crash
+    mid-write never corrupts the latest checkpoint;
+  * **sharded**: leaves split into ``n_shards`` files so hosts write/read in
+    parallel (here one process writes all shards; the layout is the same);
+  * **elastic reshard**: restore() takes the *target* pytree structure and
+    re-slices shards onto whatever mesh/shape the new job uses — a 2-pod
+    checkpoint restores onto 1 pod (pod loss) and vice versa;
+  * **integrity**: content hashes per shard, verified on load;
+  * **gc**: keep the most recent ``keep`` checkpoints.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+    return items, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, n_shards: int = 4, keep: int = 3) -> None:
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.n_shards = n_shards
+        self.keep = keep
+
+    # -- save ----------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[Dict[str, Any]] = None) -> Path:
+        items, _ = _flatten(tree)
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+
+        manifest: Dict[str, Any] = {"step": step, "leaves": {}, "extra": extra or {},
+                                    "n_shards": self.n_shards}
+        shards: List[Dict[str, np.ndarray]] = [dict() for _ in range(self.n_shards)]
+        for name, leaf in items:
+            arr = np.asarray(leaf)
+            manifest["leaves"][name] = {"shape": list(arr.shape),
+                                        "dtype": str(arr.dtype)}
+            if arr.ndim == 0 or arr.shape[0] < self.n_shards:
+                shards[0][name] = arr
+                manifest["leaves"][name]["shards"] = [0]
+            else:
+                chunks = np.array_split(arr, self.n_shards, axis=0)
+                for i, c in enumerate(chunks):
+                    shards[i][name] = c
+                manifest["leaves"][name]["shards"] = list(range(self.n_shards))
+
+        hashes = []
+        for i, shard in enumerate(shards):
+            path = tmp / f"shard_{i}.npz"
+            np.savez(path, **{k.replace("/", "|"): v for k, v in shard.items()})
+            hashes.append(hashlib.sha256(path.read_bytes()).hexdigest())
+        manifest["hashes"] = hashes
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+        return final
+
+    # -- restore ----------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        steps = sorted(int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+                       if not p.name.endswith(".tmp"))
+        return steps[-1] if steps else None
+
+    def restore(self, target_tree: Any, step: Optional[int] = None,
+                verify: bool = True) -> Tuple[Any, Dict[str, Any]]:
+        """Load into the *structure* (and shardings) of ``target_tree``.
+
+        ``target_tree`` may hold arrays or ShapeDtypeStructs; shapes must
+        match the saved shapes (elastic resharding = different device
+        placement of the same global array, which jax.device_put handles).
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+
+        if verify:
+            for i, want in enumerate(manifest["hashes"]):
+                got = hashlib.sha256((d / f"shard_{i}.npz").read_bytes()).hexdigest()
+                if got != want:
+                    raise IOError(f"checkpoint shard {i} hash mismatch at step {step}")
+
+        loaded = [np.load(d / f"shard_{i}.npz") for i in range(manifest["n_shards"])]
+        items, treedef = _flatten(target_tree)
+        leaves = []
+        for name, leaf in items:
+            info = manifest["leaves"].get(name)
+            if info is None:
+                raise KeyError(f"checkpoint missing leaf {name}")
+            key = name.replace("/", "|")
+            parts = [loaded[i][key] for i in info["shards"]]
+            arr = parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
+            want_shape = tuple(getattr(leaf, "shape", arr.shape))
+            if tuple(arr.shape) != want_shape:
+                raise ValueError(f"{name}: checkpoint shape {arr.shape} != target {want_shape}")
+            if isinstance(leaf, jax.Array) and hasattr(leaf, "sharding"):
+                arr = jax.device_put(arr, leaf.sharding)   # elastic reshard
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]
+
+    def _gc(self) -> None:
+        steps = sorted(p for p in self.dir.glob("step_*") if not p.name.endswith(".tmp"))
+        for p in steps[:-self.keep]:
+            shutil.rmtree(p)

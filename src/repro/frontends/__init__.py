@@ -1,0 +1,9 @@
+"""Frontends: thin translations from user-facing APIs into CVM IR flavors.
+
+* ``dataflow`` — the generic Python collection frontend (the one frontend
+  the paper's three systems share); produces ``rel.*``/``cf.*`` programs.
+* ``sql``      — a small SQL subset parsed onto the dataflow frontend.
+* ``linalg``   — matrices/vectors; produces ``la.*`` programs.
+* ``ml``       — k-means & co on top of the LA flavor.
+* ``tensor``   — LM training/serving step-graphs (``tz.*`` flavor).
+"""

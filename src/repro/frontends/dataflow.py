@@ -1,0 +1,299 @@
+"""Generic Python dataflow frontend.
+
+The user-facing collection API shared by all backends (paper Fig. 1: one
+Python frontend, three platforms).  ``Frame`` is an immutable logical plan
+node; ``.program()`` translates the plan into a ``rel.*`` CVM program ("this
+initial translation should be as thin as possible"), and ``Context.execute``
+drives the standard rewriting pipeline for the chosen backend.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import Builder, Program, verify
+from ..core.expr import AggSpec, Col, Expr, col, const
+from ..core.types import BAG, Atom, Bag, CollectionType, TupleType
+
+_ids = itertools.count()
+
+
+@dataclass(frozen=True)
+class _Node:
+    op: str
+    params: Tuple[Tuple[str, Any], ...]
+    children: Tuple["_Node", ...]
+    uid: int = field(default_factory=lambda: next(_ids))
+
+
+# -- aggregation helpers -----------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AggExpr:
+    fn: str
+    expr: Expr
+    name: Optional[str] = None
+
+    def as_(self, name: str) -> "AggExpr":
+        return AggExpr(self.fn, self.expr, name)
+
+
+def sum_(e: Expr | str) -> AggExpr:
+    return AggExpr("sum", col(e) if isinstance(e, str) else e)
+
+
+def count_() -> AggExpr:
+    return AggExpr("count", const(1))
+
+
+def min_(e: Expr | str) -> AggExpr:
+    return AggExpr("min", col(e) if isinstance(e, str) else e)
+
+
+def max_(e: Expr | str) -> AggExpr:
+    return AggExpr("max", col(e) if isinstance(e, str) else e)
+
+
+def avg_(e: Expr | str) -> AggExpr:
+    return AggExpr("avg", col(e) if isinstance(e, str) else e)
+
+
+class Frame:
+    """An immutable logical collection (lazy)."""
+
+    def __init__(self, ctx: "Context", node: _Node, schema: TupleType) -> None:
+        self._ctx = ctx
+        self._node = node
+        self.schema = schema
+
+    # -- transformations ----------------------------------------------------
+    def filter(self, pred: Expr) -> "Frame":
+        return Frame(self._ctx, _Node("rel.Select", (("pred", pred),), (self._node,)),
+                     self.schema)
+
+    def select(self, *names: str) -> "Frame":
+        return Frame(self._ctx, _Node("rel.Proj", (("names", tuple(names)),), (self._node,)),
+                     self.schema.project(names))
+
+    def with_columns(self, **exprs: Expr) -> "Frame":
+        all_exprs = tuple((n, col(n)) for n in self.schema.names if n not in exprs)
+        all_exprs += tuple(exprs.items())
+        fields = tuple((n, e.infer(self.schema)) for n, e in all_exprs)
+        return Frame(self._ctx, _Node("rel.ExProj", (("exprs", all_exprs),), (self._node,)),
+                     TupleType(fields))
+
+    def project(self, **exprs: Expr) -> "Frame":
+        items = tuple(exprs.items())
+        fields = tuple((n, e.infer(self.schema)) for n, e in items)
+        return Frame(self._ctx, _Node("rel.ExProj", (("exprs", items),), (self._node,)),
+                     TupleType(fields))
+
+    def join(self, other: "Frame", left_on: str | Sequence[str],
+             right_on: str | Sequence[str]) -> "Frame":
+        from ..core.ops.relational import join_schema
+
+        lo = (left_on,) if isinstance(left_on, str) else tuple(left_on)
+        ro = (right_on,) if isinstance(right_on, str) else tuple(right_on)
+        schema = join_schema(self.schema, other.schema, lo, ro)
+        return Frame(
+            self._ctx,
+            _Node("rel.Join", (("left_on", lo), ("right_on", ro)),
+                  (self._node, other._node)),
+            schema,
+        )
+
+    def order_by(self, *keys: str, ascending: Optional[Sequence[bool]] = None) -> "Frame":
+        asc = tuple(ascending or (True,) * len(keys))
+        return Frame(self._ctx,
+                     _Node("rel.OrderBy", (("keys", tuple(keys)), ("ascending", asc)),
+                           (self._node,)),
+                     self.schema)
+
+    def limit(self, k: int) -> "Frame":
+        return Frame(self._ctx, _Node("rel.Limit", (("k", k),), (self._node,)), self.schema)
+
+    # -- aggregations ---------------------------------------------------------
+    def _desugar(self, aggs: Sequence[AggExpr]) -> Tuple[Tuple[AggSpec, ...],
+                                                         Optional[Tuple[Tuple[str, Expr], ...]]]:
+        """avg → sum/count + a finalize ExProj; returns (specs, finalize)."""
+        specs: List[AggSpec] = []
+        finalize: List[Tuple[str, Expr]] = []
+        needs_finalize = False
+        for a in aggs:
+            name = a.name or f"{a.fn}_{next(_ids)}"
+            if a.fn == "avg":
+                needs_finalize = True
+                s, c = f"__{name}_sum", f"__{name}_cnt"
+                specs.append(AggSpec("sum", a.expr, s))
+                specs.append(AggSpec("count", a.expr, c))
+                finalize.append((name, col(s) / col(c)))
+            else:
+                specs.append(AggSpec(a.fn, a.expr, name))
+                finalize.append((name, col(name)))
+        return tuple(specs), (tuple(finalize) if needs_finalize else None)
+
+    def agg(self, *aggs: AggExpr) -> "Frame":
+        specs, finalize = self._desugar(aggs)
+        node = _Node("rel.Aggr", (("aggs", specs),), (self._node,))
+        schema = TupleType(tuple((s.name, s.result_atom(self.schema)) for s in specs))
+        out = Frame(self._ctx, node, schema)
+        if finalize:
+            fields = tuple((n, e.infer(schema)) for n, e in finalize)
+            out = Frame(self._ctx, _Node("rel.ExProj", (("exprs", finalize),), (node,)),
+                        TupleType(fields))
+        return out
+
+    def group_by(self, *keys: str, max_groups: Optional[int] = None) -> "GroupBy":
+        return GroupBy(self, keys, max_groups)
+
+    # -- plumbing -------------------------------------------------------------
+    def program(self, name: str = "query") -> Program:
+        b = Builder(name)
+        memo: Dict[int, Any] = {}
+
+        def build(node: _Node):
+            if node.uid in memo:
+                return memo[node.uid]
+            child_regs = [build(c) for c in node.children]
+            outs = b.emit(node.op, child_regs, dict(node.params))
+            memo[node.uid] = outs[0]
+            return outs[0]
+
+        result = build(self._node)
+        p = b.finish(result)
+        verify(p)
+        return p
+
+    def collect(self, parallel: Optional[int] = None, use_kernels: bool = False,
+                backend: Optional[Any] = None) -> Dict[str, np.ndarray]:
+        return self._ctx.execute(self, parallel=parallel, use_kernels=use_kernels,
+                                 backend=backend)
+
+
+class GroupBy:
+    def __init__(self, frame: Frame, keys: Sequence[str], max_groups: Optional[int]) -> None:
+        self.frame = frame
+        self.keys = tuple(keys)
+        self.max_groups = max_groups
+
+    def agg(self, *aggs: AggExpr) -> Frame:
+        specs, finalize = self.frame._desugar(aggs)
+        params: Tuple[Tuple[str, Any], ...] = (("keys", self.keys), ("aggs", specs))
+        if self.max_groups:
+            params += (("max_groups", self.max_groups),)
+        node = _Node("rel.GroupByAggr", params, (self.frame._node,))
+        fields = tuple((k, self.frame.schema.field(k)) for k in self.keys)
+        fields += tuple((s.name, s.result_atom(self.frame.schema)) for s in specs)
+        schema = TupleType(fields)
+        out = Frame(self.frame._ctx, node, schema)
+        if finalize:
+            keep = tuple((k, col(k)) for k in self.keys)
+            exprs = keep + finalize
+            f2 = tuple((n, e.infer(schema)) for n, e in exprs)
+            out = Frame(self.frame._ctx, _Node("rel.ExProj", (("exprs", exprs),), (node,)),
+                        TupleType(f2))
+        return out
+
+
+class Context:
+    """Holds named tables (numpy columns) and drives compilation.
+
+    ``pad_to`` rounds physical capacities up so worker counts divide them.
+    """
+
+    def __init__(self, pad_to: int = 256) -> None:
+        self.tables: Dict[str, Dict[str, np.ndarray]] = {}
+        self.schemas: Dict[str, TupleType] = {}
+        self.pad_to = pad_to
+
+    # -- catalog ---------------------------------------------------------------
+    def register(self, name: str, data: Mapping[str, np.ndarray],
+                 schema: Optional[TupleType] = None) -> None:
+        data = {k: np.asarray(v) for k, v in data.items()}
+        if schema is None:
+            schema = TupleType(tuple((k, _infer_atom(v)) for k, v in data.items()))
+        self.tables[name] = data
+        self.schemas[name] = schema
+
+    def table(self, name: str) -> Frame:
+        schema = self.schemas[name]
+        node = _Node("rel.Scan", (("table", name), ("schema", schema), ("kind", BAG)), ())
+        return Frame(self, node, schema)
+
+    # -- compilation -------------------------------------------------------------
+    def capacity(self, name: str) -> int:
+        n = len(next(iter(self.tables[name].values())))
+        p = self.pad_to
+        return max(p, ((n + p - 1) // p) * p)
+
+    def catalog(self):
+        from ..core.passes.lower_vec import Catalog
+        return Catalog(capacities={t: self.capacity(t) for t in self.tables})
+
+    def compile(self, frame: Frame, parallel: Optional[int] = None,
+                use_kernels: bool = False, fuse: bool = True, backend: Any = None):
+        """frontend program → [Parallelize] → lower to vec → [fuse] → backend."""
+        from ..backends.local import LocalBackend
+        from ..core.passes import (
+            CommonSubexpressionElimination, DeadCodeElimination, FuseSelectAgg,
+            Parallelize,
+        )
+        from ..core.passes.lower_vec import LowerRelToVec
+        from ..core.passes.rewriter import PassManager
+
+        program = frame.program()
+        passes = [CommonSubexpressionElimination(), DeadCodeElimination()]
+        if parallel and parallel > 1:
+            passes.append(Parallelize(n=parallel))
+        program = PassManager(passes).run(program)
+        program = LowerRelToVec(self.catalog()).apply(program)
+        if fuse:
+            program = PassManager([FuseSelectAgg(), DeadCodeElimination()]).run(program)
+        backend = backend or LocalBackend(use_kernels=use_kernels)
+        return backend.compile(program)
+
+    def sources(self) -> Dict[str, Any]:
+        from ..relational.runtime import VecTable
+
+        return {
+            name: VecTable.from_numpy(data, self.capacity(name))
+            for name, data in self.tables.items()
+        }
+
+    def execute(self, frame: Frame, parallel: Optional[int] = None,
+                use_kernels: bool = False, backend: Any = None) -> Dict[str, np.ndarray]:
+        compiled = self.compile(frame, parallel=parallel, use_kernels=use_kernels,
+                                backend=backend)
+        (out,) = compiled(self.sources())
+        return _to_numpy(out)
+
+
+def _infer_atom(v: np.ndarray) -> Atom:
+    from ..core.types import BOOL, F32, F64, I32, I64
+
+    if v.dtype == np.bool_:
+        return BOOL
+    if v.dtype in (np.int8, np.int16, np.int32):
+        return I32
+    if v.dtype == np.int64:
+        return I64
+    if v.dtype == np.float32:
+        return F32
+    if v.dtype == np.float64:
+        return F64
+    raise TypeError(f"unsupported column dtype {v.dtype}")
+
+
+def _to_numpy(out: Any) -> Dict[str, np.ndarray]:
+    from ..relational.runtime import VecTable
+
+    if isinstance(out, VecTable):
+        return out.to_numpy()
+    if isinstance(out, dict):
+        return {k: np.asarray(v) for k, v in out.items()}
+    return {"result": np.asarray(out)}

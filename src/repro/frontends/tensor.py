@@ -1,0 +1,126 @@
+"""Tensor frontend: the LM training step planned *through* CVM.
+
+The trainer does not hand-write its distribution: it builds the step as a
+CVM program (paper Alg. 1 shape), lets the generic parallelization rewrite
+introduce ``Split → ConcurrentExecute → pre-aggregation`` (Alg. 2), lets the
+SPMD backend rewrite the combine into a ``mesh.AllReduce``, and only then
+binds the plan to GSPMD:
+
+    batch    ← tz.Source(batch)
+    shards   ← cf.Split(n_data)(batch)                  # DP
+    g, l     ← cf.ConcurrentExecute(grad_pipeline)(shards, ⊕params, ⊕opt)
+    gsum     ← cf.CombineChunks(sum)(g)                 # pre-agg → AllReduce
+    loss     ← cf.CombineChunks(sum)(l)
+    params'  ← tz.OptUpdate(opt)(params, opt_state, gsum)
+
+``lower_to_pjit`` reads that plan and emits the concrete jit: Split on the
+batch → batch sharded over the data axes, Broadcast on params → replicated
+over data (model-axis splits come from the weight-sharding table),
+AllReduce-inside-MeshExecute → GSPMD's gradient psum.  The dry-run lowers
+exactly this artifact.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from ..core import Builder, Program, verify
+from ..core.ops.tensor import register_pipeline
+from ..core.types import CollectionKind, CollectionType, TupleType, Atom, F32, Single
+from ..models.api import Model, make_train_step
+from ..train.optimizer import Optimizer
+
+# custom collection kind: an opaque (but named) parameter/batch pytree —
+# frontends may define their own collection types (paper §3.3)
+PYTREE = CollectionKind("PyTree", abstract=False, ordered=True)
+
+
+def pytree_type(tag: str) -> CollectionType:
+    return CollectionType(PYTREE, TupleType(()), (("tag", tag),))
+
+
+def plan_train_program(model: Model, n_data: int) -> Program:
+    """Build the sequential step program and parallelize it over n_data."""
+    from ..core.passes import Parallelize
+
+    cfg = model.cfg
+    grad_name = f"grad_{cfg.arch}"
+    register_pipeline(grad_name, None, overwrite=True)  # bound at lowering
+
+    b = Builder(f"train_{cfg.arch}")
+    params = b.input("params", pytree_type("params"))
+    opt_state = b.input("opt", pytree_type("opt_state"))
+    batch = b.input("batch", pytree_type("batch"))
+
+    grads, loss = b.emit(
+        "tz.Pipeline", [batch, params],
+        {"fn": grad_name,
+         "out_types": (pytree_type("grads"), Single(TupleType.of(loss=F32)))},
+    )
+    new_params, new_opt = b.emit(
+        "tz.OptUpdate", [params, opt_state, grads], {"opt": "adamw"})
+    program = b.finish(new_params, new_opt, loss)
+    verify(program)
+
+    # Alg. 1 → Alg. 2: split the batch, push the pipeline inside, pre-agg.
+    program = Parallelize(n=n_data, targets={batch.name}).apply(program)
+    verify(program)
+    return program
+
+
+class _PlanError(Exception):
+    pass
+
+
+def plan_summary(program: Program) -> Dict[str, Any]:
+    """Extract the distribution decisions the rewrites made."""
+    ops = [i.opcode for i in program.body]
+    ce = next((i for i in program.body if i.opcode in
+               ("cf.ConcurrentExecute", "mesh.MeshExecute")), None)
+    if ce is None:
+        raise _PlanError(f"no ConcurrentExecute in plan: {ops}")
+    inner = ce.param("P")
+    return {
+        "n_workers": ce.inputs[0].type.attr("n"),
+        "split": [i.inputs[0].name for i in program.body if i.opcode == "cf.Split"],
+        "broadcast": [i.inputs[0].name for i in program.body if i.opcode == "cf.Broadcast"],
+        "combines": [i.opcode for i in program.body
+                     if i.opcode in ("cf.CombineChunks", "rel.CombinePartials")]
+                    + [i.opcode for i in inner.body if i.opcode == "mesh.AllReduce"],
+        "inner_ops": [i.opcode for i in inner.body],
+    }
+
+
+def lower_to_pjit(program: Program, model: Model, mesh, optimizer: Optimizer,
+                  batch_shapes: Dict[str, Any], microbatch: int = 1):
+    """Bind the CVM plan to a concrete pjit'd train step.
+
+    The plan dictates: which inputs are data-split (→ batch specs over the
+    dp axes), which are broadcast (→ replicated over dp, model-sharded per
+    the weight table), and that gradients pre-aggregate across workers
+    (→ GSPMD all-reduce, implicit in the replicated-param gradient).
+    """
+    from ..models import sharding as shd
+
+    summary = plan_summary(program)
+    if not summary["split"]:
+        raise _PlanError("plan has no data split")
+
+    step, opt = make_train_step(model, optimizer, microbatch=microbatch)
+
+    key_spec = jax.ShapeDtypeStruct((2,), jax.numpy.uint32)
+    params_shapes = jax.eval_shape(model.init, key_spec)
+    pspecs = shd.tree_param_specs(params_shapes, mesh)
+    opt_shapes = jax.eval_shape(opt.init, params_shapes)
+    ospecs = shd.tree_opt_specs(opt_shapes, pspecs, mesh, zero1=True)
+    bspecs = shd.batch_specs(
+        {k: (v.shape, v.dtype) for k, v in batch_shapes.items()}, mesh)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(shd.named(mesh, pspecs), shd.named(mesh, ospecs),
+                      shd.named(mesh, bspecs)),
+    )
+    return jitted, summary

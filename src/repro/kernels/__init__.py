@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+Each kernel ships as ``<name>.py`` (pl.pallas_call + explicit BlockSpec VMEM
+tiling), with ``ops.py`` as the jit'd public wrapper and ``ref.py`` as the
+pure-jnp oracle.  On this CPU container kernels run with ``interpret=True``;
+on TPU the same BlockSpecs bind to real VMEM tiles.
+
+Kernels:
+  * fused_select_agg — single-pass select+project+aggregate (TPC-H Q6 pipeline)
+  * segsum           — segment reduction as one-hot MXU matmul (GroupBy)
+  * kmeans_step      — fused assign+accumulate k-means iteration
+  * flash_attention  — causal/windowed GQA online-softmax attention
+"""
+
+from . import ops, ref  # noqa: F401

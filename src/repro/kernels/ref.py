@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the *semantic definition*; the kernels must match it to
+tolerance on every shape/dtype sweep (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.expr import AggSpec, Expr, evaluate
+
+
+def fused_select_agg(cols: Dict[str, jax.Array], valid: jax.Array, pred: Expr,
+                     aggs: Sequence[AggSpec]) -> jax.Array:
+    """Masked single-pass select+aggregate. Returns (n_aggs,) f32."""
+    keep = valid & evaluate(pred, cols, jnp)
+    outs = []
+    for a in aggs:
+        if a.fn == "count":
+            outs.append(jnp.sum(keep.astype(jnp.float32)))
+            continue
+        arr = evaluate(a.expr, cols, jnp).astype(jnp.float32)
+        if a.fn == "sum":
+            outs.append(jnp.sum(jnp.where(keep, arr, 0.0)))
+        elif a.fn == "min":
+            outs.append(jnp.min(jnp.where(keep, arr, jnp.inf)))
+        elif a.fn == "max":
+            outs.append(jnp.max(jnp.where(keep, arr, -jnp.inf)))
+        else:
+            raise ValueError(a.fn)
+    return jnp.stack(outs)
+
+
+def segsum(data: jax.Array, seg_ids: jax.Array, num_segments: int) -> jax.Array:
+    """Sum rows of ``data`` (n, d) by segment id (n,) → (num_segments, d)."""
+    return jax.ops.segment_sum(data, seg_ids, num_segments=num_segments)
+
+
+def kmeans_step(x: jax.Array, c: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One k-means iteration: (sums (k,d), counts (k,)) of nearest-centroid."""
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=1, keepdims=True).T
+    d2 = x2 - 2.0 * (x @ c.T) + c2
+    lab = jnp.argmin(d2, axis=1)
+    k = c.shape[0]
+    sums = jax.ops.segment_sum(x, lab, num_segments=k)
+    counts = jax.ops.segment_sum(jnp.ones_like(lab, dtype=jnp.float32), lab, num_segments=k)
+    return sums, counts
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    sm_scale: Optional[float] = None) -> jax.Array:
+    """Reference GQA attention.
+
+    q: (B, Hq, S, D); k, v: (B, Hkv, S, D) with Hq % Hkv == 0.
+    ``window``: sliding-window size (Mistral-style), None = full.
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), vv)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array | int, *,
+                     sm_scale: Optional[float] = None) -> jax.Array:
+    """Single-token decode attention against a (B, Hkv, S, D) cache.
+
+    Grouped-head einsum form: q is reshaped to (B, Hkv, G, 1, D) and
+    contracted against the cache directly — no ``jnp.repeat`` of K/V, so a
+    head- or sequence-sharded cache is never resharded (the repeat forced
+    GSPMD into involuntary full rematerializations; see EXPERIMENTS §Perf).
+    """
+    import os
+    b, hq, one, d = q.shape
+    hkv = k_cache.shape[1]
+    group = hq // hkv
+    s = k_cache.shape[2]
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    if os.environ.get("REPRO_DECODE_REPEAT") == "1":  # baseline path (perf log)
+        kk = jnp.repeat(k_cache, group, axis=1)
+        vv = jnp.repeat(v_cache, group, axis=1)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32) * scale
+        valid = jnp.arange(s)[None, None, None, :] < jnp.reshape(
+            jnp.asarray(cache_len), (-1, 1, 1, 1))
+        logits = jnp.where(valid, logits, -jnp.inf)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(vv.dtype), vv).astype(q.dtype)
+    qg = q.reshape(b, hkv, group, d)
+    logits = jnp.einsum("bhgd,bhkd->bhgk", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(s)[None, None, None, :] < jnp.reshape(
+        jnp.asarray(cache_len), (-1, 1, 1, 1))
+    logits = jnp.where(valid, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", probs.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, 1, d).astype(q.dtype)

@@ -1,0 +1,14 @@
+"""Model zoo: the 10 assigned architectures as composable JAX modules.
+
+All decoder stacks use scan-over-layers with stacked parameter pytrees so
+the compiled HLO is O(1) in depth (critical for the 88-layer granite dry-run
+and for XLA compile times).  Families:
+
+  dense   — starcoder2-15b, glm4-9b, qwen2-1.5b, granite-34b, qwen2-vl-7b (M-RoPE)
+  moe     — mixtral-8x7b (SWA), moonshot-v1-16b-a3b (64e top-6)
+  hybrid  — zamba2-7b (Mamba2 + shared attention blocks)
+  ssm     — rwkv6-1.6b (attention-free, data-dependent decay)
+  encdec  — whisper-base (conv frontend stubbed to frame embeddings)
+"""
+
+from .api import ModelConfig, build_model  # noqa: F401

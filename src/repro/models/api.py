@@ -1,0 +1,243 @@
+"""Model API: config dataclass + family dispatch + step builders.
+
+``build_model(cfg)`` returns a ``Model`` facade with uniform entry points
+(init / loss / prefill / decode / state init) regardless of family; the
+step builders produce the functions the launcher lowers through CVM →
+pjit (train_step, prefill_step, serve_step).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..train.optimizer import AdamW, Optimizer
+from . import hybrid, lm, ssm, whisper
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch: str
+    family: str                      # dense | moe | hybrid | rwkv | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0                  # default: d_model // n_heads
+    mlp_type: str = "swiglu"
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    causal: bool = True
+    window: Optional[int] = None     # SWA
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_aux_weight: float = 0.01
+    moe_capacity_factor: float = 1.25
+    # SSM / hybrid
+    d_inner: int = 0
+    ssm_state: int = 0
+    attn_every: int = 6
+    ssm_chunk: int = 64
+    # enc-dec
+    n_enc_layers: int = 0
+    # VLM
+    mrope_sections: Optional[Tuple[int, ...]] = None
+    # engineering
+    dtype: str = "float32"
+    attn_mode: str = "chunked"
+    remat: bool = True
+    sub_quadratic: bool = False      # eligible for long_500k
+    scan_unroll: bool = False        # unroll layer scans (roofline probes)
+    loss_chunk: int = 512            # CE loss sequence-chunk size
+    microbatch: int = 1              # gradient-accumulation microbatches
+    remat_group: int = 1             # layers per remat unit (sqrt-remat when >1)
+
+    def __post_init__(self):
+        if self.d_head == 0:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def n_attn_points(self) -> int:
+        return -(-self.n_layers // self.attn_every)
+
+    def n_params(self) -> int:
+        """Analytic parameter count (for roofline MODEL_FLOPS)."""
+        d, f, v, l = self.d_model, self.d_ff, self.vocab, self.n_layers
+        emb = v * d
+        if self.family in ("dense", "vlm", "moe"):
+            attn = d * self.n_heads * self.d_head + 2 * d * self.n_kv_heads * self.d_head \
+                + self.n_heads * self.d_head * d
+            if self.is_moe:
+                mlp = self.n_experts * 3 * d * f + d * self.n_experts
+            else:
+                mlp = (3 if self.mlp_type == "swiglu" else 2) * d * f
+            return emb + l * (attn + mlp)
+        if self.family == "hybrid":
+            di, n = self.d_inner, self.ssm_state
+            mamba = d * (2 * di + 2 * n + di // 64) + di * d
+            shared = 4 * d * d + 3 * d * f
+            return emb + l * mamba + shared
+        if self.family == "rwkv":
+            return emb + l * (5 * d * d + 2 * d * f + d * 128)
+        if self.family == "encdec":
+            per = 4 * d * self.n_heads * self.d_head + 2 * d * f
+            return emb + (self.n_enc_layers + l) * per + l * 4 * d * d
+        raise ValueError(self.family)
+
+    def n_active_params(self) -> int:
+        if not self.is_moe:
+            return self.n_params()
+        d, f, l = self.d_model, self.d_ff, self.n_layers
+        attn = d * self.n_heads * self.d_head + 2 * d * self.n_kv_heads * self.d_head \
+            + self.n_heads * self.d_head * d
+        mlp = self.top_k * 3 * d * f
+        return self.vocab * d + l * (attn + mlp)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    loss: Callable[[Any, Dict[str, jax.Array]], jax.Array]
+    prefill: Optional[Callable] = None
+    decode: Optional[Callable] = None
+    init_state: Optional[Callable] = None  # (params_or_none, batch, cap) → decode state
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return Model(
+            cfg=cfg,
+            init=lambda key: lm.init_lm(cfg, key),
+            loss=lambda p, b: lm.lm_loss(p, cfg, b),
+            prefill=lambda p, b, cap: lm.prefill(
+                p, cfg, tokens=b.get("tokens"), embeds=b.get("embeds"),
+                cache_capacity=cap, positions3=b.get("positions3")),
+            decode=lambda p, cache, toks: lm.decode_step(p, cfg, cache, toks),
+            init_state=lambda bsz, cap: {
+                "k": jnp.zeros((cfg.n_layers, bsz, cfg.n_kv_heads, cap, cfg.d_head),
+                               cfg.param_dtype),
+                "v": jnp.zeros((cfg.n_layers, bsz, cfg.n_kv_heads, cap, cfg.d_head),
+                               cfg.param_dtype),
+                "len": jnp.zeros((), jnp.int32),
+            },
+        )
+    if cfg.family == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=lambda key: hybrid.init_hybrid(cfg, key),
+            loss=lambda p, b: hybrid.lm_loss(p, cfg, b),
+            prefill=lambda p, b, cap: hybrid.prefill(p, cfg, b["tokens"], cap),
+            decode=lambda p, st, toks: hybrid.decode_step(p, cfg, st, toks),
+            init_state=lambda bsz, cap: hybrid.init_decode_state(None, cfg, bsz, cap),
+        )
+    if cfg.family == "rwkv":
+        return Model(
+            cfg=cfg,
+            init=lambda key: ssm.init_rwkv_lm(cfg, key),
+            loss=lambda p, b: ssm.rwkv_lm_loss(p, cfg, b),
+            prefill=lambda p, b, cap: ssm.rwkv_prefill(p, cfg, b["tokens"]),
+            decode=lambda p, st, toks: ssm.rwkv_decode_step(p, cfg, st, toks),
+            init_state=lambda bsz, cap: ssm.rwkv_init_state(cfg, bsz),
+        )
+    if cfg.family == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda key: whisper.init_encdec(cfg, key),
+            loss=lambda p, b: whisper.encdec_loss(p, cfg, b),
+            prefill=lambda p, b, cap: whisper.prefill(p, cfg, b["frames"], cap),
+            decode=lambda p, cache, toks: whisper.decode_step(p, cfg, cache, toks),
+        )
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+# ---------------------------------------------------------------------------
+# step builders (what the CVM tz.Pipeline instructions bind to)
+# ---------------------------------------------------------------------------
+
+
+def _microbatch_slices(batch: Dict[str, jax.Array], m: int) -> Dict[str, jax.Array]:
+    """Reshape each batch leaf to (m, b/m, ...); positions3 batches on dim 1."""
+    out = {}
+    for k, v in batch.items():
+        if k == "positions3":
+            b = v.shape[1]
+            out[k] = jnp.moveaxis(v.reshape(3, m, b // m, *v.shape[2:]), 1, 0)
+        else:
+            out[k] = v.reshape(m, v.shape[0] // m, *v.shape[1:])
+    return out
+
+
+def make_train_step(model: Model, optimizer: Optional[Optimizer] = None,
+                    microbatch: Optional[int] = None,
+                    grad_constraint: Optional[Callable[[Any], Any]] = None):
+    """Gradient-accumulation train step.
+
+    ``microbatch`` > 1 splits the global batch into that many slices and
+    accumulates grads in a scan — bounding activation memory to one slice
+    (with scan-over-layers remat this is what makes the deep configs fit
+    16 GB/chip; see EXPERIMENTS.md §Dry-run).
+
+    ``grad_constraint`` (optional) applies a sharding constraint to the f32
+    gradient accumulator — ZeRO-2-style: the accumulator shards over the
+    data axes instead of being replicated (EXPERIMENTS §Perf iteration 5).
+    """
+    opt = optimizer or AdamW()
+    m = microbatch if microbatch is not None else model.cfg.microbatch
+
+    def train_step(params, opt_state, batch):
+        if m <= 1:
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        else:
+            slices = _microbatch_slices(batch, m)
+
+            def body(carry, mb):
+                gacc, lacc = carry
+                l, g = jax.value_and_grad(model.loss)(params, mb)
+                gacc = jax.tree_util.tree_map(jnp.add, gacc, g)
+                if grad_constraint is not None:
+                    gacc = grad_constraint(gacc)
+                return (gacc, lacc + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            if grad_constraint is not None:
+                zeros = grad_constraint(zeros)
+            (gsum, lsum), _ = jax.lax.scan(body, (zeros, jnp.zeros((), jnp.float32)),
+                                           slices)
+            grads = jax.tree_util.tree_map(lambda g: g / m, gsum)
+            loss = lsum / m
+        new_params, new_state = opt.update(grads, opt_state, params)
+        return new_params, new_state, {"loss": loss}
+
+    return train_step, opt
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, state, tokens):
+        logits, new_state = model.decode(params, state, tokens)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, new_state
+
+    return serve_step
+
+
+def make_prefill_step(model: Model, cache_capacity: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cache_capacity)
+
+    return prefill_step

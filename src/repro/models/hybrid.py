@@ -1,0 +1,236 @@
+"""Zamba2-style hybrid: Mamba2 backbone + periodically applied *shared*
+attention block (one set of attention+MLP weights reused at every
+application point — the Zamba trick that buys attention quality at ~1/k the
+parameter cost).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import ssm
+
+
+def init_hybrid(cfg, key) -> Dict[str, Any]:
+    dt = cfg.param_dtype
+    kemb, km, ka, kmlp, kfin = L.split_keys(key, 5)
+    p: Dict[str, Any] = {
+        "emb": L.dense_init(kemb, (cfg.vocab, cfg.d_model), scale=0.02, dtype=dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        # one SHARED attention + MLP block
+        "shared_attn": L.init_attention(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                        cfg.d_head, dtype=dt),
+        "shared_attn_norm": jnp.ones((cfg.d_model,), dt),
+        "shared_mlp": L.init_mlp(kmlp, cfg.d_model, cfg.d_ff, "swiglu", dtype=dt),
+        "shared_mlp_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    mkeys = jax.random.split(km, cfg.n_layers)
+
+    def one(k):
+        return {
+            "mamba": ssm.init_mamba2(k, cfg.d_model, cfg.d_inner, cfg.ssm_state, dtype=dt),
+            "norm": jnp.ones((cfg.d_model,), dt),
+        }
+
+    p["layers"] = jax.vmap(one)(jnp.stack(mkeys))
+    return p
+
+
+def _shared_block(p, cfg, x, positions):
+    h = x + L.attention_block(
+        p["shared_attn"], L.rmsnorm(x, p["shared_attn_norm"]), positions,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+        causal=True, rope_theta=cfg.rope_theta, attn_mode=cfg.attn_mode,
+        attn_unroll=cfg.scan_unroll)
+    return h + L.mlp_block(p["shared_mlp"], L.rmsnorm(h, p["shared_mlp_norm"]), "swiglu")
+
+
+def backbone(params, cfg, x, positions):
+    """Mamba scan with a shared attention block every ``attn_every`` layers."""
+
+    def body(carry, inp):
+        x, idx = carry
+        lp = inp
+
+        def with_attn(x):
+            return _shared_block(params, cfg, x, positions)
+
+        x = jax.lax.cond(idx % cfg.attn_every == 0, with_attn, lambda x: x, x)
+        y, _ = ssm.mamba2_block(lp["mamba"], L.rmsnorm(x, lp["norm"]),
+                                d_inner=cfg.d_inner, ssm_state=cfg.ssm_state,
+                                chunk=cfg.ssm_chunk)
+        return (x + y, idx + 1), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, _), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.int32)), params["layers"],
+                             unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    return L.rmsnorm(x, params["final_norm"])
+
+
+def lm_loss(params, cfg, batch):
+    from .lm import chunked_ce_loss
+
+    x = params["emb"][batch["tokens"]]
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    xf = backbone(params, cfg, x, positions)
+    return chunked_ce_loss(params, cfg, xf, batch["labels"], batch["mask"],
+                           chunk=cfg.loss_chunk)
+
+
+# ---------------------------------------------------------------------------
+# serving: recurrent decode state + shared-attn KV cache
+# ---------------------------------------------------------------------------
+
+
+def _shared_kv(params, cfg, x, positions):
+    """K/V of the shared attention block for the prefill cache."""
+    xn = L.rmsnorm(x, params["shared_attn_norm"])
+    _, k, v = L._qkv(params["shared_attn"], xn, cfg.n_heads, cfg.n_kv_heads, cfg.d_head)
+    if cfg.rope_theta > 0:
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def prefill(params, cfg, tokens, cache_capacity: int):
+    """Prompt pass building the full decode state: per-layer mamba states +
+    one KV cache per shared-attention application point."""
+    x = params["emb"][tokens]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    ae = cfg.attn_every
+    full = cfg.n_layers // ae
+    rem = cfg.n_layers - full * ae
+
+    def regroup(t):
+        return jax.tree_util.tree_map(
+            lambda a: a[: full * ae].reshape((full, ae) + a.shape[1:]), t)
+
+    def mamba_scan(x, gp):
+        def one(xc, lp):
+            y, st = ssm.mamba2_block(lp["mamba"], L.rmsnorm(xc, lp["norm"]),
+                                     d_inner=cfg.d_inner, ssm_state=cfg.ssm_state,
+                                     chunk=cfg.ssm_chunk)
+            return xc + y, st
+        return jax.lax.scan(one, x, gp)
+
+    def group(x, gp):
+        k, v = _shared_kv(params, cfg, x, positions)
+        x = _shared_block(params, cfg, x, positions)
+        x, (convs, ssms) = mamba_scan(x, gp)
+        return x, (k, v, convs, ssms)
+
+    grouped = regroup(params["layers"])
+    x, (ks, vs, convs, ssms) = jax.lax.scan(group, x, grouped)
+    convs = convs.reshape((full * ae,) + convs.shape[2:])
+    ssms = ssms.reshape((full * ae,) + ssms.shape[2:])
+
+    if rem:
+        tail = jax.tree_util.tree_map(lambda a: a[full * ae:], params["layers"])
+        tk, tv = _shared_kv(params, cfg, x, positions)
+        x = _shared_block(params, cfg, x, positions)
+        x, (tc, ts) = mamba_scan(x, tail)
+        ks = jnp.concatenate([ks, tk[None]])
+        vs = jnp.concatenate([vs, tv[None]])
+        convs = jnp.concatenate([convs, tc])
+        ssms = jnp.concatenate([ssms, ts])
+
+    pad = cache_capacity - s
+    if pad > 0:
+        ks = jnp.concatenate(
+            [ks, jnp.zeros(ks.shape[:3] + (pad,) + ks.shape[4:], ks.dtype)], axis=3)
+        vs = jnp.concatenate(
+            [vs, jnp.zeros(vs.shape[:3] + (pad,) + vs.shape[4:], vs.dtype)], axis=3)
+
+    xf = L.rmsnorm(x, params["final_norm"])
+    logits = xf[:, -1].astype(jnp.float32) @ params["emb"].astype(jnp.float32).T
+    state = {"conv": convs, "ssm": ssms, "k": ks, "v": vs,
+             "len": jnp.asarray(s, jnp.int32)}
+    return logits, state
+
+
+def init_decode_state(params, cfg, batch_size: int, cache_capacity: int):
+    h = cfg.d_inner // 64
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch_size, 3, cfg.d_inner), cfg.param_dtype),
+        "ssm": jnp.zeros((cfg.n_layers, batch_size, h, cfg.ssm_state, 64), jnp.float32),
+        # one KV cache per shared-attention application point
+        "k": jnp.zeros((cfg.n_attn_points, batch_size, cfg.n_kv_heads,
+                        cache_capacity, cfg.d_head), cfg.param_dtype),
+        "v": jnp.zeros((cfg.n_attn_points, batch_size, cfg.n_kv_heads,
+                        cache_capacity, cfg.d_head), cfg.param_dtype),
+        "len": jnp.asarray(0, jnp.int32),
+    }
+
+
+def _decode_attn(params, cfg, x, ck, cv, clen):
+    xn = L.rmsnorm(x, params["shared_attn_norm"])
+    att, nk, nv = L.decode_attention_block(
+        params["shared_attn"], xn, ck, cv, clen,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+        rope_theta=cfg.rope_theta)
+    x = x + att
+    x = x + L.mlp_block(params["shared_mlp"],
+                        L.rmsnorm(x, params["shared_mlp_norm"]), "swiglu")
+    return x, nk, nv
+
+
+def _decode_mamba_scan(cfg, x, layer_params, conv_s, ssm_s):
+    def one(xc, inp):
+        lp, cs, ss = inp
+        y, (nc, ns) = ssm.mamba2_decode(lp["mamba"], L.rmsnorm(xc, lp["norm"]),
+                                        (cs, ss), d_inner=cfg.d_inner,
+                                        ssm_state=cfg.ssm_state)
+        return xc + y, (nc, ns)
+
+    return jax.lax.scan(one, x, (layer_params, conv_s, ssm_s))
+
+
+def decode_step(params, cfg, state, tokens):
+    """One-token decode: scan over (shared-attn + mamba-group) super-blocks
+    so the HLO stays O(1) in depth; the trailing partial group is unrolled.
+    """
+    x = params["emb"][tokens]
+    clen = state["len"]
+    ae = cfg.attn_every
+    full = cfg.n_layers // ae
+    rem = cfg.n_layers - full * ae
+
+    def regroup(a):
+        head = a[: full * ae].reshape((full, ae) + a.shape[1:])
+        return head
+
+    grouped = jax.tree_util.tree_map(regroup, params["layers"])
+    conv_g = regroup(state["conv"])
+    ssm_g = regroup(state["ssm"])
+
+    def group(x, inp):
+        gp, ck, cv, cs, ss = inp
+        x, nk, nv = _decode_attn(params, cfg, x, ck, cv, clen)
+        x, (ncs, nss) = _decode_mamba_scan(cfg, x, gp, cs, ss)
+        return x, (nk, nv, ncs, nss)
+
+    x, (nk, nv, nconv, nssm) = jax.lax.scan(
+        group, x, (grouped, state["k"][:full], state["v"][:full], conv_g, ssm_g))
+    nconv = nconv.reshape((full * ae,) + nconv.shape[2:])
+    nssm = nssm.reshape((full * ae,) + nssm.shape[2:])
+
+    if rem:  # trailing partial group: one more shared-attn point + rem mambas
+        tail = jax.tree_util.tree_map(lambda a: a[full * ae:], params["layers"])
+        x, tk, tv = _decode_attn(params, cfg, x, state["k"][full], state["v"][full], clen)
+        x, (tc, ts) = _decode_mamba_scan(cfg, x, tail,
+                                         state["conv"][full * ae:], state["ssm"][full * ae:])
+        nk = jnp.concatenate([nk, tk[None]])
+        nv = jnp.concatenate([nv, tv[None]])
+        nconv = jnp.concatenate([nconv, tc])
+        nssm = jnp.concatenate([nssm, ts])
+
+    xf = L.rmsnorm(x, params["final_norm"])
+    logits = xf[:, -1].astype(jnp.float32) @ params["emb"].astype(jnp.float32).T
+    new_state = {"conv": nconv, "ssm": nssm, "k": nk, "v": nv, "len": clen + 1}
+    return logits, new_state

@@ -1,0 +1,240 @@
+"""Decoder-only transformer LM (dense / MoE / SWA / M-RoPE variants).
+
+Design invariants:
+  * scan-over-layers with stacked params — HLO size is O(1) in depth;
+  * remat around each layer (configurable policy);
+  * the LM loss is computed in sequence chunks so the (B, S, V) logits are
+    never materialized (vocab can be 152k) — with vocab-sharded embeddings
+    GSPMD turns the per-chunk logsumexp into a model-axis all-reduce;
+  * decode carries a (L, B, Hkv, S, D) KV cache, updated functionally.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+def init_lm(cfg, key) -> Dict[str, Any]:
+    kemb, klay, kfin = L.split_keys(key, 3)
+    dt = cfg.param_dtype
+    p: Dict[str, Any] = {
+        "emb": L.dense_init(kemb, (cfg.vocab, cfg.d_model), scale=0.02, dtype=dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    lkeys = jax.random.split(klay, cfg.n_layers)
+
+    def one_layer(k):
+        ka, km = jax.random.split(k)
+        lp = {
+            "attn": L.init_attention(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.d_head, cfg.qkv_bias, dtype=dt),
+            "attn_norm": jnp.ones((cfg.d_model,), dt),
+            "mlp_norm": jnp.ones((cfg.d_model,), dt),
+        }
+        if cfg.is_moe:
+            lp["moe"] = L.init_moe(km, cfg.d_model, cfg.d_ff, cfg.n_experts, dtype=dt)
+        else:
+            lp["mlp"] = L.init_mlp(km, cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype=dt)
+        return lp
+
+    p["layers"] = jax.vmap(one_layer)(jnp.stack(lkeys))
+    return p
+
+
+def _layer_fwd(cfg, lp, x, positions, positions3):
+    h = x + L.attention_block(
+        lp["attn"], L.rmsnorm(x, lp["attn_norm"]), positions,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+        causal=cfg.causal, window=cfg.window, rope_theta=cfg.rope_theta,
+        mrope_sections=cfg.mrope_sections, positions3=positions3,
+        attn_mode=cfg.attn_mode, attn_unroll=cfg.scan_unroll,
+    )
+    z = L.rmsnorm(h, lp["mlp_norm"])
+    if cfg.is_moe:
+        y, aux = L.moe_block(lp["moe"], z, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                             capacity_factor=cfg.moe_capacity_factor)
+    else:
+        y, aux = L.mlp_block(lp["mlp"], z, cfg.mlp_type), jnp.zeros((), jnp.float32)
+    return h + y, aux
+
+
+def backbone(params, cfg, x, positions, positions3=None):
+    """Run all layers (scan + remat). x: (B, S, D) → (x, aux_loss).
+
+    ``remat_group`` > 1 checkpoints *groups* of layers (sqrt-remat): only
+    L/g boundary activations are saved; within-group activations
+    rematerialize transiently during backward.  Recompute FLOPs are
+    unchanged (each layer is still recomputed exactly once) but saved-
+    activation memory drops g× — what brings the 88-layer granite under
+    the 16 GB budget (EXPERIMENTS §Perf iteration 6).
+    """
+    g = cfg.remat_group
+    init = (x, jnp.zeros((), jnp.float32))
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = _layer_fwd(cfg, lp, x, positions, positions3)
+        return (x, aux + a), None
+
+    if g > 1 and cfg.n_layers % g == 0 and not cfg.scan_unroll and cfg.remat:
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape((cfg.n_layers // g, g) + a.shape[1:]),
+            params["layers"])
+
+        def group_body(carry, gp):
+            c, _ = jax.lax.scan(body, carry, gp)
+            return c, None
+
+        group_body = jax.checkpoint(group_body, policy=None)
+        (x, aux), _ = jax.lax.scan(group_body, init, grouped)
+        return L.rmsnorm(x, params["final_norm"]), aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=None)
+    unroll = cfg.n_layers if cfg.scan_unroll else 1
+    (x, aux), _ = jax.lax.scan(body, init, params["layers"], unroll=unroll)
+    return L.rmsnorm(x, params["final_norm"]), aux
+
+
+def embed(params, cfg, tokens=None, embeds=None):
+    if embeds is not None:
+        return embeds.astype(cfg.param_dtype)
+    return params["emb"][tokens]
+
+
+def forward(params, cfg, tokens=None, embeds=None, positions=None, positions3=None):
+    """Full forward → logits (B, S, V). For tests/small shapes only."""
+    x = embed(params, cfg, tokens, embeds)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, aux = backbone(params, cfg, x, positions, positions3)
+    logits = (x.astype(jnp.float32) @ params["emb"].astype(jnp.float32).T)
+    return logits, aux
+
+
+def chunked_ce_loss(params, cfg, x_final, labels, mask, chunk: int = 512):
+    """Next-token CE without materializing full logits.
+
+    x_final: (B, S, D); labels, mask: (B, S).  lax.scan over sequence chunks,
+    rematerialized so backward recomputes each chunk's logits.
+    """
+    b, s, d = x_final.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    emb = params["emb"].astype(jnp.float32)
+
+    def body(carry, idx):
+        tot, cnt = carry
+        xs = jax.lax.dynamic_slice_in_dim(x_final, idx * chunk, chunk, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, idx * chunk, chunk, axis=1)
+        ms = jax.lax.dynamic_slice_in_dim(mask, idx * chunk, chunk, axis=1)
+        logits = xs.astype(jnp.float32) @ emb.T                    # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        tot = tot + jnp.sum((lse - ll) * ms)
+        cnt = cnt + jnp.sum(ms)
+        return (tot, cnt), None
+
+    body = jax.checkpoint(body)
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        jnp.arange(s // chunk))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(params, cfg, batch):
+    """batch: {tokens|embeds, labels, mask[, positions3]} → scalar loss."""
+    x = embed(params, cfg, batch.get("tokens"), batch.get("embeds"))
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    xf, aux = backbone(params, cfg, x, positions, batch.get("positions3"))
+    ce = chunked_ce_loss(params, cfg, xf, batch["labels"], batch["mask"],
+                         chunk=cfg.loss_chunk)
+    return ce + cfg.moe_aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def _layer_kv(cfg, lp, x, positions, positions3=None):
+    """Recompute K/V for the cache during prefill."""
+    xn = L.rmsnorm(x, lp["attn_norm"])
+    b, s, _ = xn.shape
+    q, k, v = L._qkv(lp["attn"], xn, cfg.n_heads, cfg.n_kv_heads, cfg.d_head)
+    if cfg.mrope_sections is not None:
+        k = L.apply_mrope(k, positions3, cfg.mrope_sections, cfg.rope_theta)
+    elif cfg.rope_theta > 0:
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def prefill(params, cfg, tokens=None, embeds=None, cache_capacity=None,
+            positions3=None):
+    """Process the prompt; returns (last-position hidden, kv cache pytree)."""
+    x = embed(params, cfg, tokens, embeds)
+    b, s, _ = x.shape
+    cap = cache_capacity or s
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if cfg.mrope_sections is not None and positions3 is None:
+        positions3 = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (3, b, s))
+
+    def body(carry, lp):
+        x, aux = carry
+        k, v = _layer_kv(cfg, lp, x, positions, positions3)
+        x, a = _layer_fwd(cfg, lp, x, positions, positions3)
+        return (x, aux + a), (k, v)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (xf, _), (ks, vs) = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                     params["layers"],
+                                     unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    xf = L.rmsnorm(xf, params["final_norm"])
+    pad = cap - s
+    if pad > 0:
+        zk = jnp.zeros(ks.shape[:3] + (pad,) + ks.shape[4:], ks.dtype)
+        ks = jnp.concatenate([ks, zk], axis=3)
+        vs = jnp.concatenate([vs, zk], axis=3)
+    cache = {"k": ks, "v": vs, "len": jnp.asarray(s, jnp.int32)}
+    logits = xf[:, -1].astype(jnp.float32) @ params["emb"].astype(jnp.float32).T
+    return logits, cache
+
+
+def decode_step(params, cfg, cache, tokens):
+    """One decode step. tokens: (B, 1) → (logits (B, V), new cache)."""
+    x = embed(params, cfg, tokens)
+    clen = cache["len"]
+
+    def body(carry, layer):
+        x = carry
+        lp, ck, cv = layer
+        xn = L.rmsnorm(x, lp["attn_norm"])
+        att, nk, nv = L.decode_attention_block(
+            lp["attn"], xn, ck, cv, clen,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+            window=cfg.window, rope_theta=cfg.rope_theta,
+        )
+        h = x + att
+        z = L.rmsnorm(h, lp["mlp_norm"])
+        if cfg.is_moe:
+            y, _ = L.moe_block(lp["moe"], z, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                               capacity_factor=cfg.moe_capacity_factor)
+        else:
+            y = L.mlp_block(lp["mlp"], z, cfg.mlp_type)
+        return h + y, (nk, nv)
+
+    x, (nks, nvs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]),
+                                 unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = x[:, -1].astype(jnp.float32) @ params["emb"].astype(jnp.float32).T
+    new_cache = {"k": nks, "v": nvs, "len": clen + 1}
+    return logits, new_cache

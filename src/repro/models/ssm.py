@@ -1,0 +1,294 @@
+"""State-space / linear-recurrence blocks: Mamba2 (SSD) and RWKV6.
+
+Mamba2 uses the chunked SSD algorithm — intra-chunk work is matmul-shaped
+(MXU-friendly) and inter-chunk state is a short scan: the TPU-native
+formulation (vs. the CUDA selective-scan kernel of the paper's GPU world).
+RWKV6 ("Finch") implements data-dependent decay with a time scan for
+training and an O(1) recurrent state for decode.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / SSD
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(key, d_model: int, d_inner: int, ssm_state: int, d_head: int = 64,
+                d_conv: int = 4, dtype=jnp.float32) -> Dict[str, Any]:
+    h = d_inner // d_head
+    ks = L.split_keys(key, 4)
+    return {
+        # in_proj → [z (Di), x (Di), B (N), C (N), dt (H)]
+        "in_proj": L.dense_init(ks[0], (d_model, 2 * d_inner + 2 * ssm_state + h), dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner)) * 0.1).astype(dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((d_inner,), dtype),
+        "out_proj": L.dense_init(ks[2], (d_inner, d_model), dtype=dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d. x: (B,S,Di); w: (K,Di). Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return jax.nn.silu(y), new_state
+
+
+def ssd_chunked(x, a, Bm, Cm, chunk: int = 64, init_state=None):
+    """Chunked SSD. x: (B,S,H,P); a: (B,S,H) log-decay ≤ 0; Bm, Cm: (B,S,N).
+
+    Returns (y: (B,S,H,P), final_state: (B,H,N,P)).
+    """
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    c = min(chunk, S)
+    assert S % c == 0
+    nc = S // c
+    # SSD state math in f32 (decays are exp()s; bf16 states drift)
+    xr = x.reshape(B_, nc, c, H, P).astype(jnp.float32)
+    ar = a.reshape(B_, nc, c, H).astype(jnp.float32)
+    Br = Bm.reshape(B_, nc, c, N).astype(jnp.float32)
+    Cr = Cm.reshape(B_, nc, c, N).astype(jnp.float32)
+    acum = jnp.cumsum(ar, axis=2)                                  # (B,nc,c,H)
+
+    # intra-chunk (matmul-shaped)
+    diff = acum[:, :, :, None, :] - acum[:, :, None, :, :]         # (B,nc,c,c,H)
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    Lmat = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bniN,bnjN->bnij", Cr, Br)                 # (B,nc,c,c)
+    y_intra = jnp.einsum("bnij,bnijh,bnjhp->bnihp", scores, Lmat, xr)
+
+    # chunk boundary states
+    decay_to_end = jnp.exp(acum[:, :, -1:, :] - acum)              # (B,nc,c,H)
+    states = jnp.einsum("bnjN,bnjh,bnjhp->bnhNp", Br, decay_to_end, xr)  # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(acum[:, :, -1, :])                       # (B,nc,H)
+
+    s0 = (init_state.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((B_, H, N, P), jnp.float32))
+
+    def scan_fn(s_prev, inp):
+        st, dec = inp                                              # (B,H,N,P), (B,H)
+        y_state = s_prev                                           # state BEFORE chunk
+        s_next = s_prev * dec[..., None, None] + st
+        return s_next, y_state
+
+    states_t = jnp.moveaxis(states, 1, 0)                          # (nc,B,H,N,P)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)                      # (nc,B,H)
+    final_state, prev_states = jax.lax.scan(scan_fn, s0, (states_t, decay_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                  # (B,nc,H,N,P)
+
+    # inter-chunk contribution
+    y_inter = jnp.einsum("bniN,bnhNp,bnih->bnihp", Cr, prev_states, jnp.exp(acum))
+    y = (y_intra + y_inter).reshape(B_, S, H, P).astype(x.dtype)
+    return y, final_state
+
+
+def mamba2_block(p, x, *, d_inner: int, ssm_state: int, d_head: int = 64,
+                 chunk: int = 64, state=None):
+    """x: (B,S,D) → (y, new_state).  state = (conv_state, ssm_state) for decode."""
+    B_, S, D = x.shape
+    h = d_inner // d_head
+    n = ssm_state
+    u = x @ p["in_proj"]
+    z, xs, Bm, Cm, dt = jnp.split(
+        u, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n], axis=-1)
+    conv_state = state[0] if state is not None else None
+    xs, new_conv = _causal_conv(xs, p["conv_w"], conv_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                        # (H,) < 0
+    a = dt * A                                                      # log-decay
+    xh = xs.reshape(B_, S, h, d_head) * dt[..., None].astype(xs.dtype)
+    ssm0 = state[1] if state is not None else None
+    y, new_ssm = ssd_chunked(xh, a, Bm, Cm, chunk=chunk, init_state=ssm0)
+    y = y + xh * p["D"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(B_, S, d_inner) * jax.nn.silu(z)
+    y = L.rmsnorm(y, p["norm"])
+    return (y @ p["out_proj"]).astype(x.dtype), (new_conv, new_ssm)
+
+
+def mamba2_decode(p, x, state, *, d_inner: int, ssm_state: int, d_head: int = 64):
+    """Single-token recurrent step (S=1) — O(state) work."""
+    return mamba2_block(p, x, d_inner=d_inner, ssm_state=ssm_state, d_head=d_head,
+                        chunk=1, state=state)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch)
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv6(key, d_model: int, d_ff: int, d_head: int = 64, w_lora: int = 64,
+               dtype=jnp.float32) -> Dict[str, Any]:
+    h = d_model // d_head
+    ks = L.split_keys(key, 10)
+    return {
+        "mu": (jax.random.uniform(ks[0], (5, d_model)) * 0.5).astype(dtype),  # r,k,v,g,w
+        "w0": jnp.full((d_model,), -5.0, jnp.float32),
+        "w1": L.dense_init(ks[1], (d_model, w_lora), dtype=dtype),
+        "w2": L.dense_init(ks[2], (w_lora, d_model), scale=0.01, dtype=dtype),
+        "u": (jax.random.normal(ks[3], (h, d_head)) * 0.1).astype(jnp.float32),
+        "wr": L.dense_init(ks[4], (d_model, d_model), dtype=dtype),
+        "wk": L.dense_init(ks[5], (d_model, d_model), dtype=dtype),
+        "wv": L.dense_init(ks[6], (d_model, d_model), dtype=dtype),
+        "wg": L.dense_init(ks[7], (d_model, d_model), dtype=dtype),
+        "wo": L.dense_init(ks[8], (d_model, d_model), dtype=dtype),
+        "ln_x": jnp.ones((d_model,), dtype),
+        # channel mix
+        "cm_mu": (jax.random.uniform(ks[9], (2, d_model)) * 0.5).astype(dtype),
+        "cm_k": L.dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "cm_v": L.dense_init(ks[1], (d_ff, d_model), dtype=dtype),
+        "cm_r": L.dense_init(ks[2], (d_model, d_model), dtype=dtype),
+    }
+
+
+def _token_shift(x, last=None):
+    """Shift sequence right by one; ``last`` is the previous token for decode."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def rwkv6_time_mix(p, x, *, d_head: int = 64, state=None):
+    """x: (B,S,D) → (y, (last_x, wkv_state))."""
+    B_, S, D = x.shape
+    h = D // d_head
+    last_x = state[0] if state is not None else None
+    xp = _token_shift(x, last_x)
+
+    def mix(i):
+        return x + p["mu"][i] * (xp - x)
+
+    r = (mix(0) @ p["wr"]).reshape(B_, S, h, d_head)
+    k = (mix(1) @ p["wk"]).reshape(B_, S, h, d_head)
+    v = (mix(2) @ p["wv"]).reshape(B_, S, h, d_head)
+    g = jax.nn.silu(mix(3) @ p["wg"])
+    w = p["w0"] + jnp.tanh(mix(4) @ p["w1"]) @ p["w2"]              # (B,S,D)
+    w = jnp.exp(-jnp.exp(w.astype(jnp.float32))).reshape(B_, S, h, d_head)  # decay∈(0,1)
+
+    s0 = state[1] if state is not None else jnp.zeros((B_, h, d_head, d_head), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                        # (B,h,P) each
+        kv = kt[..., :, None] * vt[..., None, :]                    # (B,h,P,P)
+        out = jnp.einsum("bhp,bhpq->bhq", rt, s + p["u"][..., None] * kv)
+        s_new = wt[..., None] * s + kv
+        return s_new, out
+
+    rs, ks_, vs, ws = (jnp.moveaxis(t, 1, 0) for t in
+                       (r.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), w))
+    s_final, outs = jax.lax.scan(step, s0, (rs, ks_, vs, ws))
+    y = jnp.moveaxis(outs, 0, 1).reshape(B_, S, D).astype(x.dtype)
+    y = L.rmsnorm(y, p["ln_x"]) * g
+    return y @ p["wo"], (x[:, -1:], s_final)
+
+
+def rwkv6_channel_mix(p, x, state=None):
+    last_x = state if state is not None else None
+    xp = _token_shift(x, last_x)
+    xk = x + p["cm_mu"][0] * (xp - x)
+    xr = x + p["cm_mu"][1] * (xp - x)
+    k = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    return jax.nn.sigmoid(xr @ p["cm_r"]) * (k @ p["cm_v"]), x[:, -1:]
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 full model
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv_lm(cfg, key) -> Dict[str, Any]:
+    dt = cfg.param_dtype
+    kemb, klay = L.split_keys(key, 2)
+    p: Dict[str, Any] = {
+        "emb": L.dense_init(kemb, (cfg.vocab, cfg.d_model), scale=0.02, dtype=dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    lkeys = jax.random.split(klay, cfg.n_layers)
+
+    def one(k):
+        return {
+            "tm": init_rwkv6(k, cfg.d_model, cfg.d_ff, dtype=dt),
+            "tm_norm": jnp.ones((cfg.d_model,), dt),
+            "cm_norm": jnp.ones((cfg.d_model,), dt),
+        }
+
+    p["layers"] = jax.vmap(one)(jnp.stack(lkeys))
+    return p
+
+
+def rwkv_backbone(params, cfg, x, state=None):
+    """x: (B,S,D) → (x_final, new_state).  state: per-layer recurrent pytree."""
+
+    def body(carry, inp):
+        x = carry
+        if state is None:
+            lp = inp
+            st_tm, st_cm = None, None
+        else:
+            lp, st_tm, st_cm = inp
+        y, new_tm = rwkv6_time_mix(lp["tm"], L.rmsnorm(x, lp["tm_norm"]), state=st_tm)
+        x = x + y
+        y, new_cm = rwkv6_channel_mix(lp["tm"], L.rmsnorm(x, lp["cm_norm"]), state=st_cm)
+        return x + y, (new_tm, new_cm)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    xs = params["layers"] if state is None else (params["layers"], state[0], state[1])
+    x, new_state = jax.lax.scan(body, x, xs,
+                                unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    return L.rmsnorm(x, params["final_norm"]), new_state
+
+
+def rwkv_lm_loss(params, cfg, batch):
+    from .lm import chunked_ce_loss
+
+    x = params["emb"][batch["tokens"]]
+    xf, _ = rwkv_backbone(params, cfg, x)
+    return chunked_ce_loss(params, cfg, xf, batch["labels"], batch["mask"],
+                           chunk=cfg.loss_chunk)
+
+
+def rwkv_init_state(cfg, batch_size: int):
+    h = cfg.d_model // 64
+    lt = cfg.n_layers
+    tm = (jnp.zeros((lt, batch_size, 1, cfg.d_model), cfg.param_dtype),
+          jnp.zeros((lt, batch_size, h, 64, 64), jnp.float32))
+    cm = jnp.zeros((lt, batch_size, 1, cfg.d_model), cfg.param_dtype)
+    return (tm, cm)
+
+
+def rwkv_decode_step(params, cfg, state, tokens):
+    """tokens: (B,1) → (logits, new_state). O(1) per token — no KV cache."""
+    x = params["emb"][tokens]
+    xf, new_state = rwkv_backbone(params, cfg, x, state=state)
+    logits = xf[:, -1].astype(jnp.float32) @ params["emb"].astype(jnp.float32).T
+    return logits, new_state
+
+
+def rwkv_prefill(params, cfg, tokens):
+    """Process a prompt in parallel; returns (logits, recurrent state).
+
+    The scan ys of the backbone ARE the per-layer final states (the
+    constant-size 'cache' of an attention-free model).
+    """
+    x = params["emb"][tokens]
+    xf, states = rwkv_backbone(params, cfg, x)
+    tm, cm = states
+    logits = xf[:, -1].astype(jnp.float32) @ params["emb"].astype(jnp.float32).T
+    return logits, (tm, cm)

@@ -1,0 +1,167 @@
+"""Whisper-style encoder-decoder backbone (conv audio frontend stubbed).
+
+Per the assignment, the modality frontend is a stub: ``input_specs`` feeds
+precomputed frame embeddings (B, S_enc, D) straight into the encoder.  The
+decoder is a standard causal stack with cross-attention; serving precomputes
+cross K/V once at prefill.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+def init_encdec(cfg, key) -> Dict[str, Any]:
+    dt = cfg.param_dtype
+    kemb, kenc, kdec = L.split_keys(key, 3)
+    p: Dict[str, Any] = {
+        "emb": L.dense_init(kemb, (cfg.vocab, cfg.d_model), scale=0.02, dtype=dt),
+        "enc_final_norm": jnp.ones((cfg.d_model,), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+
+    def enc_layer(k):
+        ka, km = jax.random.split(k)
+        return {
+            "attn": L.init_attention(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.d_head, dtype=dt),
+            "attn_norm": jnp.ones((cfg.d_model,), dt),
+            "mlp": L.init_mlp(km, cfg.d_model, cfg.d_ff, "gelu", dtype=dt),
+            "mlp_norm": jnp.ones((cfg.d_model,), dt),
+        }
+
+    def dec_layer(k):
+        ka, kc, km = L.split_keys(k, 3)
+        return {
+            "attn": L.init_attention(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.d_head, dtype=dt),
+            "attn_norm": jnp.ones((cfg.d_model,), dt),
+            "cross": L.init_attention(kc, cfg.d_model, cfg.n_heads, cfg.n_heads,
+                                      cfg.d_head, dtype=dt),
+            "cross_norm": jnp.ones((cfg.d_model,), dt),
+            "mlp": L.init_mlp(km, cfg.d_model, cfg.d_ff, "gelu", dtype=dt),
+            "mlp_norm": jnp.ones((cfg.d_model,), dt),
+        }
+
+    p["enc_layers"] = jax.vmap(enc_layer)(jnp.stack(jax.random.split(kenc, cfg.n_enc_layers)))
+    p["dec_layers"] = jax.vmap(dec_layer)(jnp.stack(jax.random.split(kdec, cfg.n_layers)))
+    return p
+
+
+def encode(params, cfg, frames):
+    """frames: (B, S_enc, D) stubbed conv-frontend output → encoder states."""
+    x = frames.astype(cfg.param_dtype)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(x, lp):
+        h = x + L.attention_block(
+            lp["attn"], L.rmsnorm(x, lp["attn_norm"]), positions,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+            causal=False, rope_theta=cfg.rope_theta, attn_mode=cfg.attn_mode,
+            attn_unroll=cfg.scan_unroll)
+        return h + L.mlp_block(lp["mlp"], L.rmsnorm(h, lp["mlp_norm"]), "gelu"), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"],
+                        unroll=cfg.n_enc_layers if cfg.scan_unroll else 1)
+    return L.rmsnorm(x, params["enc_final_norm"])
+
+
+def _cross_kv(lp, enc, n_heads, d_head):
+    b, s, _ = enc.shape
+    k = (enc @ lp["cross"]["wk"]).reshape(b, s, n_heads, d_head).transpose(0, 2, 1, 3)
+    v = (enc @ lp["cross"]["wv"]).reshape(b, s, n_heads, d_head).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def decode_train(params, cfg, enc, tokens):
+    """Teacher-forced decoder forward → final hidden states (B, S_dec, D)."""
+    x = params["emb"][tokens]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(x, lp):
+        h = x + L.attention_block(
+            lp["attn"], L.rmsnorm(x, lp["attn_norm"]), positions,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+            causal=True, rope_theta=cfg.rope_theta, attn_mode=cfg.attn_mode,
+            attn_unroll=cfg.scan_unroll)
+        ck, cv = _cross_kv(lp, enc, cfg.n_heads, cfg.d_head)
+        h = h + L.cross_attention_block(lp["cross"], L.rmsnorm(h, lp["cross_norm"]),
+                                        ck, cv, n_heads=cfg.n_heads,
+                                        n_kv=cfg.n_heads, d_head=cfg.d_head)
+        return h + L.mlp_block(lp["mlp"], L.rmsnorm(h, lp["mlp_norm"]), "gelu"), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"],
+                        unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    return L.rmsnorm(x, params["final_norm"])
+
+
+def encdec_loss(params, cfg, batch):
+    from .lm import chunked_ce_loss
+
+    enc = encode(params, cfg, batch["frames"])
+    xf = decode_train(params, cfg, enc, batch["tokens"])
+    return chunked_ce_loss(params, cfg, xf, batch["labels"], batch["mask"],
+                           chunk=cfg.loss_chunk)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg, frames, cache_capacity: int):
+    """Encode audio; build (empty) decoder self-cache + cross K/V."""
+    enc = encode(params, cfg, frames)
+
+    def per_layer(lp):
+        return _cross_kv(lp, enc, cfg.n_heads, cfg.d_head)
+
+    cross_k, cross_v = jax.vmap(per_layer)(params["dec_layers"])   # (L,B,H,S,Dh)
+    b = frames.shape[0]
+    shape = (cfg.n_layers, b, cfg.n_kv_heads, cache_capacity, cfg.d_head)
+    cache = {
+        "k": jnp.zeros(shape, cfg.param_dtype),
+        "v": jnp.zeros(shape, cfg.param_dtype),
+        "cross_k": cross_k, "cross_v": cross_v,
+        "len": jnp.asarray(0, jnp.int32),
+    }
+    return cache
+
+
+def decode_step(params, cfg, cache, tokens):
+    x = params["emb"][tokens]
+    clen = cache["len"]
+
+    def body(x, inp):
+        lp, ck, cv, xk, xv = inp
+        xn = L.rmsnorm(x, lp["attn_norm"])
+        att, nk, nv = L.decode_attention_block(
+            lp["attn"], xn, ck, cv, clen,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+            rope_theta=cfg.rope_theta)
+        h = x + att
+        h = h + L.cross_attention_block(lp["cross"], L.rmsnorm(h, lp["cross_norm"]),
+                                        xk, xv, n_heads=cfg.n_heads,
+                                        n_kv=cfg.n_heads, d_head=cfg.d_head)
+        h = h + L.mlp_block(lp["mlp"], L.rmsnorm(h, lp["mlp_norm"]), "gelu")
+        return h, (nk, nv)
+
+    x, (nks, nvs) = jax.lax.scan(
+        body, x,
+        (params["dec_layers"], cache["k"], cache["v"], cache["cross_k"], cache["cross_v"]),
+        unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = x[:, -1].astype(jnp.float32) @ params["emb"].astype(jnp.float32).T
+    new_cache = dict(cache, k=nks, v=nvs, len=clen + 1)
+    return logits, new_cache

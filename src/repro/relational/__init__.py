@@ -1,0 +1,9 @@
+"""Physical relational runtime: padded, masked column blocks on JAX.
+
+The TPU adaptation of the paper's Volcano pipelines (DESIGN.md §2):
+static-shape ``VecTable`` blocks with validity masks instead of dynamic
+tuple streams; selection is late-materialized (predicated), joins are
+sort-based, grouped aggregation is segment reduction.
+"""
+
+from .runtime import VecTable  # noqa: F401

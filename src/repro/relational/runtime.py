@@ -1,0 +1,277 @@
+"""VecTable: the physical ``Vec⟨tuple⟩`` collection on JAX.
+
+A VecTable is a struct-of-arrays block with a static capacity and a
+validity mask.  All relational operators are pure functions VecTable →
+VecTable with static output shapes (XLA requirement); cardinality lives in
+the mask.  This file is the executable meaning of the ``vec.*`` IR flavor.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.expr import AggSpec, Expr, evaluate
+
+_I64_MAX = np.iinfo(np.int64).max
+_F32_INF = np.float32(np.inf)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class VecTable:
+    cols: Dict[str, jax.Array]
+    valid: jax.Array  # bool (cap,)
+
+    # -- pytree ------------------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.cols))
+        return tuple(self.cols[n] for n in names) + (self.valid,), names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        return cls(cols=dict(zip(names, children[:-1])), valid=children[-1])
+
+    # -- basics ------------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return int(self.valid.shape[0])
+
+    def count(self) -> jax.Array:
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+    @staticmethod
+    def from_numpy(data: Mapping[str, np.ndarray], capacity: Optional[int] = None) -> "VecTable":
+        n = len(next(iter(data.values())))
+        cap = capacity or n
+        if cap < n:
+            raise ValueError(f"capacity {cap} < rows {n}")
+        cols = {}
+        for k, v in data.items():
+            v = np.asarray(v)
+            pad = np.zeros((cap - n,) + v.shape[1:], dtype=v.dtype)
+            cols[k] = jnp.asarray(np.concatenate([v, pad]))
+        valid = jnp.asarray(np.arange(cap) < n)
+        return VecTable(cols, valid)
+
+    def to_numpy(self) -> Dict[str, np.ndarray]:
+        mask = np.asarray(self.valid)
+        return {k: np.asarray(v)[mask] for k, v in self.cols.items()}
+
+    def astuple_cols(self, names: Sequence[str]) -> List[jax.Array]:
+        return [self.cols[n] for n in names]
+
+
+# ---------------------------------------------------------------------------
+# operators (pure functions — the vec.* flavor semantics)
+# ---------------------------------------------------------------------------
+
+
+def mask_select(t: VecTable, pred: Expr) -> VecTable:
+    """Predicated (late-materialized) selection: narrow the mask only."""
+    p = evaluate(pred, t.cols, jnp)
+    return VecTable(t.cols, t.valid & p)
+
+
+def proj(t: VecTable, names: Sequence[str]) -> VecTable:
+    return VecTable({n: t.cols[n] for n in names}, t.valid)
+
+
+def exproj(t: VecTable, exprs: Sequence[Tuple[str, Expr]]) -> VecTable:
+    cap = t.capacity
+    out = {}
+    for name, e in exprs:
+        v = evaluate(e, t.cols, jnp)
+        if jnp.ndim(v) == 0:
+            v = jnp.full((cap,), v)
+        out[name] = v
+    return VecTable(out, t.valid)
+
+
+def _masked(fn: str, arr: jax.Array, valid: jax.Array) -> jax.Array:
+    if fn == "count":
+        return jnp.sum(valid.astype(jnp.int64 if jax.config.jax_enable_x64 else jnp.int32))
+    if jnp.issubdtype(arr.dtype, jnp.integer) or jnp.issubdtype(arr.dtype, jnp.bool_):
+        arr = arr.astype(jnp.float32)
+    if fn == "sum":
+        return jnp.sum(jnp.where(valid, arr, 0))
+    if fn == "min":
+        return jnp.min(jnp.where(valid, arr, _F32_INF))
+    if fn == "max":
+        return jnp.max(jnp.where(valid, arr, -_F32_INF))
+    raise ValueError(fn)
+
+
+def aggr(t: VecTable, aggs: Sequence[AggSpec]) -> Dict[str, jax.Array]:
+    """Masked scalar aggregation → Single⟨aggs⟩ (dict of scalars)."""
+    out = {}
+    for a in aggs:
+        arr = evaluate(a.expr, t.cols, jnp) if a.fn != "count" else t.valid
+        if jnp.ndim(arr) == 0:
+            arr = jnp.full((t.capacity,), arr)
+        out[a.name] = _masked(a.fn, arr, t.valid)
+    return out
+
+
+def combine_partials(partials: Sequence[Dict[str, jax.Array]], aggs: Sequence[AggSpec]) -> Dict[str, jax.Array]:
+    out = {}
+    for a in aggs:
+        vals = jnp.stack([p[a.name] for p in partials])
+        fn = a.combine_fn
+        out[a.name] = {"sum": jnp.sum, "min": jnp.min, "max": jnp.max}[fn](vals)
+    return out
+
+
+def _sort_perm(t: VecTable, keys: Sequence[str], ascending: Sequence[bool]) -> jax.Array:
+    """Permutation: valid rows first, ordered by keys (stable)."""
+    arrays = []
+    for k, asc in zip(reversed(list(keys)), reversed(list(ascending))):
+        arr = t.cols[k]
+        if not asc:
+            if jnp.issubdtype(arr.dtype, jnp.bool_):
+                arr = ~arr
+            else:
+                arr = -arr.astype(jnp.float32) if not jnp.issubdtype(arr.dtype, jnp.integer) else -arr
+        arrays.append(arr)
+    arrays.append(~t.valid)  # primary: valid first
+    return jnp.lexsort(tuple(arrays), axis=0)
+
+
+def sort_by_key(t: VecTable, keys: Sequence[str], ascending: Optional[Sequence[bool]] = None) -> VecTable:
+    asc = list(ascending or [True] * len(keys))
+    perm = _sort_perm(t, keys, asc)
+    return VecTable({k: v[perm] for k, v in t.cols.items()}, t.valid[perm])
+
+
+def compact(t: VecTable, max_count: Optional[int] = None) -> VecTable:
+    """Densify valid rows to the front (argsort on ~valid, stable)."""
+    perm = jnp.argsort(~t.valid, stable=True)
+    cols = {k: v[perm] for k, v in t.cols.items()}
+    valid = t.valid[perm]
+    if max_count is not None and max_count != t.capacity:
+        cols = {k: v[:max_count] for k, v in cols.items()}
+        valid = valid[:max_count]
+    return VecTable(cols, valid)
+
+
+def _composite_key(t: VecTable, keys: Sequence[str]) -> jax.Array:
+    """Combine (small-domain) key columns into one i64 for segmenting."""
+    acc = None
+    for k in keys:
+        arr = t.cols[k]
+        if jnp.issubdtype(arr.dtype, jnp.floating):
+            arr = arr.view(jnp.int32) if arr.dtype == jnp.float32 else arr.astype(jnp.int32)
+        arr = arr.astype(jnp.int32)
+        acc = arr if acc is None else acc * jnp.int32(65536) + (arr & jnp.int32(0xFFFF))
+    return acc
+
+
+def group_agg_sorted(t: VecTable, keys: Sequence[str], aggs: Sequence[AggSpec],
+                     max_groups: int) -> VecTable:
+    """Grouped aggregation over a key-sorted block via segment reduction.
+
+    The TPU-native replacement of hash aggregation: valid rows are sorted by
+    key (invalid at the end), segment ids are the prefix count of key
+    changes, and each agg is a masked ``jax.ops.segment_*``.
+    """
+    ck = _composite_key(t, keys)
+    prev = jnp.concatenate([ck[:1] - 1, ck[:-1]])
+    change = (ck != prev) & t.valid
+    seg = jnp.cumsum(change.astype(jnp.int32)) - 1  # -1 before first valid group
+    seg = jnp.where(t.valid, seg, max_groups)  # dump invalid rows
+    seg = jnp.clip(seg, 0, max_groups)
+
+    out_cols: Dict[str, jax.Array] = {}
+    for k in keys:
+        out_cols[k] = jax.ops.segment_max(
+            jnp.where(t.valid, t.cols[k], jnp.zeros((), t.cols[k].dtype)),
+            seg, num_segments=max_groups + 1)[:max_groups]
+    for a in aggs:
+        if a.fn == "count":
+            arr = t.valid.astype(jnp.int32)
+            red = jax.ops.segment_sum(arr, seg, num_segments=max_groups + 1)[:max_groups]
+        else:
+            arr = evaluate(a.expr, t.cols, jnp)
+            if jnp.issubdtype(arr.dtype, jnp.integer):
+                arr = arr.astype(jnp.float32)
+            if a.fn == "sum":
+                red = jax.ops.segment_sum(jnp.where(t.valid, arr, 0), seg,
+                                          num_segments=max_groups + 1)[:max_groups]
+            elif a.fn == "min":
+                red = jax.ops.segment_min(jnp.where(t.valid, arr, _F32_INF), seg,
+                                          num_segments=max_groups + 1)[:max_groups]
+            elif a.fn == "max":
+                red = jax.ops.segment_max(jnp.where(t.valid, arr, -_F32_INF), seg,
+                                          num_segments=max_groups + 1)[:max_groups]
+            else:
+                raise ValueError(a.fn)
+        out_cols[a.name] = red
+    n_groups = jnp.sum(change.astype(jnp.int32))
+    group_valid = jnp.arange(max_groups) < n_groups
+    return VecTable(out_cols, group_valid)
+
+
+def merge_join_sorted(left: VecTable, right: VecTable, left_on: Sequence[str],
+                      right_on: Sequence[str], max_count: int) -> VecTable:
+    """PK-FK inner equi-join: ``right`` must be key-sorted with unique keys.
+
+    searchsorted + gather — the TPU-native rewrite of Build/ProbeHTable.
+    Multi-column keys are composited (16-bit fields); larger domains need a
+    single integer key column (documented limitation of this backend).
+    """
+    if len(left_on) != 1 or len(right_on) != 1:
+        lk = _composite_key(left, left_on)
+        rk = _composite_key(right, right_on)
+    else:
+        lk = left.cols[left_on[0]].astype(jnp.int32)
+        rk = right.cols[right_on[0]].astype(jnp.int32)
+    sentinel = jnp.iinfo(jnp.int32).max
+    rk = jnp.where(right.valid, rk, sentinel)
+    idx = jnp.searchsorted(rk, lk)
+    idx_c = jnp.clip(idx, 0, right.capacity - 1)
+    match = (rk[idx_c] == lk) & left.valid
+
+    out = dict(left.cols)
+    lnames = set(left.cols)
+    for k, v in right.cols.items():
+        if k in right_on:
+            continue
+        name = k if k not in lnames else k + "_r"
+        out[name] = v[idx_c]
+    joined = VecTable(out, match)
+    if max_count != left.capacity:
+        joined = compact(joined, max_count)
+    return joined
+
+
+def topk(t: VecTable, keys: Sequence[str], ascending: Sequence[bool], k: int) -> VecTable:
+    s = sort_by_key(t, keys, ascending)
+    return VecTable({kk: v[:k] for kk, v in s.cols.items()}, s.valid[:k])
+
+
+def concat(tables: Sequence[VecTable]) -> VecTable:
+    cols = {k: jnp.concatenate([t.cols[k] for t in tables]) for k in tables[0].cols}
+    valid = jnp.concatenate([t.valid for t in tables])
+    return VecTable(cols, valid)
+
+
+def split(t: VecTable, n: int) -> List[VecTable]:
+    cap = t.capacity
+    if cap % n != 0:
+        raise ValueError(f"capacity {cap} not divisible by {n}")
+    c = cap // n
+    return [
+        VecTable({k: v[i * c:(i + 1) * c] for k, v in t.cols.items()},
+                 t.valid[i * c:(i + 1) * c])
+        for i in range(n)
+    ]
+
+
+def limit(t: VecTable, k: int) -> VecTable:
+    c = compact(t)
+    keep = jnp.arange(t.capacity) < k
+    return VecTable(c.cols, c.valid & keep)

@@ -1,0 +1,3 @@
+"""Training substrate: optimizers, step builders, gradient compression."""
+
+from .optimizer import AdamW, Optimizer, SGD  # noqa: F401

@@ -1,0 +1,77 @@
+"""Optimizers as pure pytree transforms (no external deps).
+
+State layout mirrors the parameter tree so the ZeRO-1 sharding rules in
+``models.sharding`` can address moments exactly like weights.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params) → (new_params, new_state)
+
+
+def AdamW(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, grad_clip: float = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        if grad_clip is not None:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                 for g in jax.tree_util.tree_leaves(grads)))
+            scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def m_next(g, m):
+            return b1 * m + (1 - b1) * g.astype(jnp.float32)
+
+        def v_next(g, v):
+            g32 = g.astype(jnp.float32)
+            return b2 * v + (1 - b2) * g32 * g32
+
+        new_m = jax.tree_util.tree_map(m_next, grads, state["m"])
+        new_v = jax.tree_util.tree_map(v_next, grads, state["v"])
+
+        def p_next(p, m, v):
+            delta = (m / bc1) / (jnp.sqrt(v / bc2) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(p_next, params, new_m, new_v)
+        return new_params, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def SGD(lr: float = 1e-2, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {
+            "mom": jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        new_m = jax.tree_util.tree_map(
+            lambda g, m: momentum * m + g.astype(jnp.float32), grads, state["mom"])
+        new_params = jax.tree_util.tree_map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype), params, new_m)
+        return new_params, {"mom": new_m, "step": state["step"] + 1}
+
+    return Optimizer(init, update)

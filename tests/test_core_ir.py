@@ -1,0 +1,206 @@
+"""Unit tests for the CVM IR language: types, programs, verification."""
+
+import pytest
+
+from repro.core import Builder, Program, Register, VerificationError, verify, subprogram
+from repro.core.expr import AggSpec, col, const
+from repro.core.types import (
+    BAG, SEQ, SET,
+    Atom, Bag, BOOL, CollectionType, F32, I32, I64, ItemType, KDSeq, Seq, Set_,
+    Single, Tensor, TupleType, Vec, relation,
+)
+
+
+# ---------------------------------------------------------------------------
+# Type grammar
+# ---------------------------------------------------------------------------
+
+class TestTypes:
+    def test_atom_domains(self):
+        assert Atom("f32").np_dtype == "float32"
+        with pytest.raises(TypeError):
+            Atom("complex128")
+
+    def test_recursive_grammar(self):
+        # item := atom | tuple of items | collection of items
+        nested = Bag(TupleType.of(a=Bag(TupleType.of(b=F32))))  # NF² relation
+        assert nested.item.field("a").item.field("b") == F32
+
+    def test_tuple_duplicate_fields_rejected(self):
+        with pytest.raises(TypeError):
+            TupleType((("x", F32), ("x", I32)))
+
+    def test_tuple_projection(self):
+        t = TupleType.of(a=F32, b=I32, c=BOOL)
+        assert t.project(["c", "a"]).names == ("c", "a")
+
+    def test_lex_fields_physical_order(self):
+        t = TupleType.of(z=F32, a=I32)
+        assert [n for n, _ in t.lex_fields] == ["a", "z"]
+
+    def test_table1_examples(self):
+        # RA relation / LA matrix / CSR / row-store — all in one grammar
+        ra = relation(SET, a=F32, b=I32)
+        assert ra.kind is SET and ra.schema.names == ("a", "b")
+        matrix = KDSeq(Atom("num"), (64, 32))
+        assert matrix.attr("shape") == (64, 32)
+        csr = Single(TupleType.of(A=Vec(F32), I=Vec(I32), O=Vec(I32)))
+        assert csr.item.field("A").kind.name == "Vec"
+        rowstore = Vec(TupleType.of(v1=F32, v2=I32), max_count=1024)
+        assert rowstore.attr("max_count") == 1024
+
+    def test_type_equality_hashable(self):
+        a = Bag(TupleType.of(x=F32))
+        b = Bag(TupleType.of(x=F32))
+        assert a == b and hash(a) == hash(b)
+        assert a != Bag(TupleType.of(x=F64())) if callable(F32) else True  # noqa
+
+    def test_tensor(self):
+        t = Tensor(F32, (8, 128))
+        from repro.core.types import tensor_shape, tensor_dtype
+        assert tensor_shape(t) == (8, 128)
+        assert tensor_dtype(t) == F32
+
+    def test_render(self):
+        t = Bag(TupleType.of(x=F32))
+        assert "Bag" in t.render() and "x: f32" in t.render()
+
+
+F64 = Atom("f64")
+
+LINEITEM = TupleType.of(
+    l_quantity=F32, l_eprice=F32, l_disc=F32, l_shipdate=Atom("date"),
+)
+
+
+def tpch_q6_seq() -> Program:
+    """Paper Algorithm 1: the sequential Q6 program."""
+    b = Builder("Tpch6Seq")
+    li = b.input("lineitem", Bag(LINEITEM))
+    pred = (
+        col("l_shipdate").between(8766, 9131)
+        & col("l_disc").between(0.05, 0.07)
+        & (col("l_quantity") < 24.0)
+    )
+    filtered = b.emit1("rel.Select", [li], {"pred": pred})
+    projected = b.emit1(
+        "rel.ExProj", [filtered], {"exprs": (("x", col("l_eprice") * col("l_disc")),)}
+    )
+    result = b.emit1(
+        "rel.Aggr", [projected], {"aggs": (AggSpec("sum", col("x"), "revenue"),)}
+    )
+    return b.finish(result)
+
+
+# ---------------------------------------------------------------------------
+# Programs + verifier
+# ---------------------------------------------------------------------------
+
+class TestProgram:
+    def test_build_and_verify_q6(self):
+        p = tpch_q6_seq()
+        verify(p)
+        assert [i.opcode for i in p.body] == ["rel.Select", "rel.ExProj", "rel.Aggr"]
+        # typing: result is Single⟨revenue: f32⟩
+        assert p.results[0].type.kind.name == "Single"
+        assert p.results[0].type.item.names == ("revenue",)
+
+    def test_ssa_double_assign_rejected(self):
+        p = tpch_q6_seq()
+        # duplicate the first instruction => double assignment
+        bad = p.with_body(list(p.body) + [p.body[0]])
+        with pytest.raises(VerificationError, match="assigned twice"):
+            verify(bad)
+
+    def test_use_before_def_rejected(self):
+        p = tpch_q6_seq()
+        bad = p.with_body(list(p.body[::-1]))
+        with pytest.raises(VerificationError):
+            verify(bad)
+
+    def test_wrong_output_type_rejected(self):
+        p = tpch_q6_seq()
+        ins0 = p.body[0]
+        wrong = ins0.with_outputs([Register(ins0.outputs[0].name, Bag(TupleType.of(zz=F32)))])
+        # fix uses so the only error is the typing rule
+        with pytest.raises(VerificationError):
+            verify(p.with_body([wrong] + list(p.body[1:])))
+
+    def test_rename_all_preserves_verification(self):
+        p = tpch_q6_seq()
+        q = p.rename_all("_copy")
+        verify(q)
+        assert all(r.name.endswith("_copy") for r in q.inputs)
+        assert q.results[0].name.endswith("_copy")
+
+    def test_higher_order_nested_verify(self):
+        inner = tpch_q6_seq()
+        b = Builder("outer")
+        li = b.input("lineitem", Bag(LINEITEM))
+        shards = b.emit1("cf.Split", [li], {"n": 4})
+        outs = b.emit("cf.ConcurrentExecute", [shards], {"P": inner})
+        merged = b.emit1("cf.Merge", [outs[0]])
+        p = b.finish(merged)
+        verify(p)
+        # walk() visits nested programs
+        assert any(q.name == "Tpch6Seq" for q in p.walk())
+
+    def test_concurrent_execute_type_mismatch_rejected(self):
+        inner = tpch_q6_seq()
+        b = Builder("outer")
+        li = b.input("lineitem", Bag(TupleType.of(wrong=F32)))
+        shards = b.emit1("cf.Split", [li], {"n": 4})
+        with pytest.raises(Exception):
+            b.emit("cf.ConcurrentExecute", [shards], {"P": inner})
+
+    def test_loop_requires_type_preserving_body(self):
+        t = Tensor(F32, (4, 4))
+        body = subprogram("step", [("x", t)], lambda b, rs: [
+            b.emit1("la.Ewise", [rs[0]], {"op": "add"}, out_type=t)
+        ])
+        b = Builder("looped")
+        x = b.input("x", t)
+        (y,) = b.emit("cf.Loop", [x], {"n": 3, "P": body})
+        p = b.finish(y)
+        verify(p)
+
+    def test_render_roundtrip_contains_structure(self):
+        p = tpch_q6_seq()
+        s = p.render()
+        assert "program Tpch6Seq" in s and "rel.Aggr" in s and "Return" in s
+
+    def test_unknown_opcode_tolerated_then_rejected(self):
+        b = Builder("u")
+        x = b.input("x", Bag(LINEITEM))
+        out = b.fresh(Bag(LINEITEM))
+        from repro.core.program import Instruction
+        b.append(Instruction("exotic.Op", (x,), (out,)))
+        p = b.finish(out)
+        verify(p)  # unknown ops tolerated by default (paper: "leave it as is")
+        with pytest.raises(VerificationError):
+            verify(p, allow_unknown_ops=False)
+
+
+class TestExpr:
+    def test_inference(self):
+        s = LINEITEM
+        assert (col("l_quantity") < 24.0).infer(s) == BOOL
+        assert (col("l_eprice") * col("l_disc")).infer(s) == F32
+        assert (col("l_eprice") + 1).infer(s) == F32
+
+    def test_bad_logic_rejected(self):
+        with pytest.raises(TypeError):
+            (col("l_eprice") & col("l_disc")).infer(LINEITEM)
+
+    def test_evaluate_numpy(self):
+        import numpy as np
+        from repro.core.expr import evaluate
+        cols = {"l_eprice": np.array([1.0, 2.0]), "l_disc": np.array([0.5, 0.25])}
+        out = evaluate(col("l_eprice") * col("l_disc"), cols, np)
+        assert out.tolist() == [0.5, 0.5]
+
+    def test_agg_spec_decomposition(self):
+        a = AggSpec("count", col("l_disc"), "n")
+        assert a.combine_fn == "sum"
+        with pytest.raises(ValueError):
+            AggSpec("avg", col("l_disc"), "m")

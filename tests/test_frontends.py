@@ -1,0 +1,171 @@
+"""SQL frontend + property-based rewrite-invariance tests.
+
+The hypothesis tests check the system's core invariant on *randomly
+generated* relational programs: every rewriting pipeline (CSE, DCE,
+parallelization with any worker count) preserves abstract-machine
+semantics.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.backends.interp import Interpreter
+from repro.core import verify
+from repro.core.expr import AggSpec, col, const
+from repro.core.passes import (
+    CommonSubexpressionElimination, DeadCodeElimination, Parallelize,
+)
+from repro.core.passes.rewriter import PassManager
+from repro.frontends import sql
+from repro.frontends.dataflow import Context
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    rng = np.random.default_rng(5)
+    n = 3000
+    c = Context(pad_to=256)
+    c.register("t", {
+        "a": rng.integers(0, 20, n).astype(np.int32),
+        "b": rng.uniform(0, 100, n).astype(np.float32),
+        "c": rng.uniform(0, 1, n).astype(np.float32),
+        "g": rng.integers(0, 4, n).astype(np.int32),
+    })
+    c.register("dim", {
+        "g": np.arange(4, dtype=np.int32),
+        "label": np.asarray([10, 20, 30, 40], dtype=np.int32),
+    })
+    return c
+
+
+class TestSQL:
+    def test_scalar_agg(self, ctx):
+        out = sql.query(ctx, "SELECT sum(b * c) AS s, count(*) AS n FROM t WHERE a < 10")
+        t = ctx.tables["t"]
+        m = t["a"] < 10
+        assert out["s"] == pytest.approx(float((t["b"] * t["c"])[m].sum()), rel=1e-4)
+        assert int(out["n"]) == int(m.sum())
+
+    def test_group_by_order_by(self, ctx):
+        out = sql.query(ctx, "SELECT sum(b) AS s FROM t GROUP BY g ORDER BY g")
+        t = ctx.tables["t"]
+        want = [float(t["b"][t["g"] == g].sum()) for g in range(4)]
+        np.testing.assert_allclose(np.asarray(out["s"], dtype=np.float64), want, rtol=1e-4)
+
+    def test_join(self, ctx):
+        out = sql.query(ctx, "SELECT sum(label) AS s FROM t JOIN dim ON g = g WHERE b < 50")
+        t, d = ctx.tables["t"], ctx.tables["dim"]
+        m = t["b"] < 50
+        want = d["label"][t["g"][m]].sum()
+        assert int(out["s"]) == int(want)
+
+    def test_between_and_arithmetic(self, ctx):
+        out = sql.query(ctx, "SELECT sum(b - 2 * c) AS s FROM t WHERE c BETWEEN 0.2 AND 0.4")
+        t = ctx.tables["t"]
+        m = (t["c"] >= 0.2) & (t["c"] <= 0.4)
+        assert out["s"] == pytest.approx(float((t["b"] - 2 * t["c"])[m].sum()), rel=1e-4)
+
+    def test_avg_desugars(self, ctx):
+        out = sql.query(ctx, "SELECT avg(b) AS m FROM t")
+        assert out["m"] == pytest.approx(float(ctx.tables["t"]["b"].mean()), rel=1e-4)
+
+    def test_syntax_error(self, ctx):
+        with pytest.raises(SyntaxError):
+            sql.parse("SELECT FROM t", ctx)
+
+    def test_same_ir_as_python_frontend(self, ctx):
+        """SQL and the Python dataflow frontend compile to the same plan."""
+        q_sql = sql.parse("SELECT sum(b) AS s FROM t WHERE a < 5", ctx)
+        from repro.frontends.dataflow import sum_
+        q_py = ctx.table("t").filter(col("a") < 5).agg(sum_("b").as_("s"))
+        assert [i.opcode for i in q_sql.program().body] == \
+               [i.opcode for i in q_py.program().body]
+
+
+# ---------------------------------------------------------------------------
+# property-based rewrite invariance
+# ---------------------------------------------------------------------------
+
+SCHEMA_COLS = ["a", "b", "c", "g"]
+
+
+def _tables(seed, n):
+    rng = np.random.default_rng(seed)
+    return {"t": {
+        "a": rng.integers(0, 20, n).astype(np.int32),
+        "b": rng.uniform(0, 100, n).astype(np.float32),
+        "c": rng.uniform(0, 1, n).astype(np.float32),
+        "g": rng.integers(0, 4, n).astype(np.int32),
+    }}
+
+
+@st.composite
+def random_query(draw):
+    """A random Select/ExProj/Aggr-or-GroupBy pipeline over table t."""
+    c = Context(pad_to=64)
+    c.register("t", _tables(0, 8)["t"])  # schema donor
+    f = c.table("t")
+    n_filters = draw(st.integers(0, 2))
+    for _ in range(n_filters):
+        column = draw(st.sampled_from(["a", "b", "c"]))
+        thresh = draw(st.floats(0.1, 50.0, allow_nan=False))
+        f = f.filter(col(column) < float(thresh))
+    if draw(st.booleans()):
+        f = f.with_columns(x=col("b") * col("c") + draw(st.integers(0, 5)))
+        val = "x"
+    else:
+        val = "b"
+    fn = draw(st.sampled_from(["sum", "count", "min", "max"]))
+    grouped = draw(st.booleans())
+    if grouped:
+        node_params = {"keys": ("g",), "aggs": (AggSpec(fn, col(val), "r"),),
+                       "max_groups": 8}
+        from repro.frontends.dataflow import _Node, Frame
+        from repro.core.types import TupleType
+        node = _Node("rel.GroupByAggr", tuple(node_params.items()), (f._node,))
+        fields = (("g", f.schema.field("g")),
+                  ("r", AggSpec(fn, col(val), "r").result_atom(f.schema)))
+        f = Frame(c, node, TupleType(fields))
+    else:
+        from repro.frontends.dataflow import AggExpr
+        f = f.agg(AggExpr(fn, col(val), "r"))
+    return f.program("rand")
+
+
+@settings(max_examples=25, deadline=None)
+@given(program=random_query(), n_workers=st.integers(1, 6),
+       seed=st.integers(0, 1000), n_rows=st.integers(1, 500))
+def test_parallelize_preserves_semantics_on_random_programs(
+        program, n_workers, seed, n_rows):
+    tables = _tables(seed, n_rows)
+    interp = Interpreter(sources=tables)
+    (want,) = interp.run(program)
+
+    pm = PassManager([CommonSubexpressionElimination(), DeadCodeElimination(),
+                      Parallelize(n=n_workers)])
+    rewritten = pm.run(program)
+    verify(rewritten)
+    (got,) = Interpreter(sources=tables).run(rewritten)
+
+    if isinstance(want, dict) and "r" in want and np.ndim(want.get("r")) == 0:
+        np.testing.assert_allclose(float(got["r"]), float(want["r"]), rtol=1e-6)
+    else:
+        ow = np.argsort(np.asarray(want["g"]))
+        og = np.argsort(np.asarray(got["g"]))
+        np.testing.assert_array_equal(np.asarray(want["g"])[ow],
+                                      np.asarray(got["g"])[og])
+        np.testing.assert_allclose(np.asarray(want["r"], dtype=np.float64)[ow],
+                                   np.asarray(got["r"], dtype=np.float64)[og],
+                                   rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(program=random_query())
+def test_rewrites_keep_programs_verifiable(program):
+    for n in (2, 4):
+        out = PassManager([Parallelize(n=n), CommonSubexpressionElimination(),
+                           DeadCodeElimination()]).run(program)
+        verify(out)
+        # parallelization must not lose the Return value
+        assert len(out.results) == len(program.results)

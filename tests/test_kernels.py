@@ -1,0 +1,213 @@
+"""Per-kernel allclose sweeps: Pallas (interpret mode) vs pure-jnp oracle.
+
+Every kernel sweeps shapes/dtypes and asserts against ref.py.  Property
+tests (hypothesis) cover the data-dependent kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.expr import AggSpec, col
+from repro.kernels import ops, ref
+from repro.relational.runtime import VecTable
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# fused_select_agg
+# ---------------------------------------------------------------------------
+
+PRED = (col("a") > 0.3) & (col("b") < 0.8)
+AGGS = (
+    AggSpec("sum", col("a") * col("b"), "s"),
+    AggSpec("count", col("a"), "n"),
+    AggSpec("min", col("a"), "lo"),
+    AggSpec("max", col("b") - col("a"), "hi"),
+)
+
+
+class TestFusedSelectAgg:
+    @pytest.mark.parametrize("cap,valid_frac", [(256, 1.0), (1000, 0.7), (4096, 0.5), (128, 0.0)])
+    def test_sweep_capacity(self, cap, valid_frac):
+        r = rng(cap)
+        cols = {
+            "a": r.uniform(0, 1, cap).astype(np.float32),
+            "b": r.uniform(0, 1, cap).astype(np.float32),
+        }
+        valid = r.uniform(0, 1, cap) < valid_frac
+        t = VecTable({k: jnp.asarray(v) for k, v in cols.items()}, jnp.asarray(valid))
+        got = ops.fused_select_agg(t, PRED, AGGS, interpret=True)
+        want = ref.fused_select_agg(t.cols, t.valid, PRED, AGGS)
+        for i, a in enumerate(AGGS):
+            np.testing.assert_allclose(np.asarray(got[a.name]), np.asarray(want[i]),
+                                       rtol=1e-5, err_msg=a.name)
+
+    @pytest.mark.parametrize("block_rows", [8, 64, 512])
+    def test_sweep_block_shape(self, block_rows):
+        r = rng(1)
+        cap = 2048
+        cols = {"a": r.uniform(0, 1, cap).astype(np.float32),
+                "b": r.uniform(0, 1, cap).astype(np.float32)}
+        t = VecTable({k: jnp.asarray(v) for k, v in cols.items()},
+                     jnp.asarray(np.ones(cap, bool)))
+        got = ops.fused_select_agg(t, PRED, AGGS, block_rows=block_rows, interpret=True)
+        want = ref.fused_select_agg(t.cols, t.valid, PRED, AGGS)
+        for i, a in enumerate(AGGS):
+            np.testing.assert_allclose(np.asarray(got[a.name]), np.asarray(want[i]), rtol=1e-5)
+
+    def test_integer_date_columns(self):
+        r = rng(2)
+        cap = 512
+        cols = {"d": r.integers(8000, 10000, cap).astype(np.int32),
+                "x": r.uniform(0, 1, cap).astype(np.float32)}
+        t = VecTable({k: jnp.asarray(v) for k, v in cols.items()},
+                     jnp.asarray(np.ones(cap, bool)))
+        pred = (col("d") >= 8500) & (col("d") < 9500)
+        aggs = (AggSpec("sum", col("x"), "s"), AggSpec("count", col("x"), "n"))
+        got = ops.fused_select_agg(t, pred, aggs, interpret=True)
+        want = ref.fused_select_agg(t.cols, t.valid, pred, aggs)
+        np.testing.assert_allclose(np.asarray(got["s"]), np.asarray(want[0]), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(got["n"]), np.asarray(want[1]), rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# segsum
+# ---------------------------------------------------------------------------
+
+
+class TestSegSum:
+    @pytest.mark.parametrize("n,d,k", [(256, 8, 4), (1000, 16, 17), (2048, 128, 64), (64, 1, 2)])
+    def test_sweep_shapes(self, n, d, k):
+        r = rng(n + d + k)
+        data = r.normal(size=(n, d)).astype(np.float32)
+        seg = r.integers(0, k, n).astype(np.int32)
+        got = ops.segsum(jnp.asarray(data), jnp.asarray(seg), k, interpret=True)
+        want = ref.segsum(jnp.asarray(data), jnp.asarray(seg), k)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(16, 600), d=st.integers(1, 32), k=st.integers(1, 40),
+           seed=st.integers(0, 2**16))
+    def test_property_matches_oracle(self, n, d, k, seed):
+        r = rng(seed)
+        data = r.normal(size=(n, d)).astype(np.float32)
+        seg = r.integers(0, k, n).astype(np.int32)
+        got = ops.segsum(jnp.asarray(data), jnp.asarray(seg), k, block_rows=128, interpret=True)
+        want = ref.segsum(jnp.asarray(data), jnp.asarray(seg), k)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# kmeans_step
+# ---------------------------------------------------------------------------
+
+
+class TestKMeansStep:
+    @pytest.mark.parametrize("n,d,k", [(1024, 8, 5), (1000, 32, 16), (4096, 128, 8)])
+    def test_sweep_shapes(self, n, d, k):
+        r = rng(n * 7 + k)
+        x = r.normal(size=(n, d)).astype(np.float32)
+        c = r.normal(size=(k, d)).astype(np.float32)
+        gs, gc = ops.kmeans_step(jnp.asarray(x), jnp.asarray(c), interpret=True)
+        ws, wc = ref.kmeans_step(jnp.asarray(x), jnp.asarray(c))
+        np.testing.assert_allclose(np.asarray(gc), np.asarray(wc), rtol=0)
+        np.testing.assert_allclose(np.asarray(gs), np.asarray(ws), rtol=1e-4, atol=1e-4)
+
+    def test_counts_conserved(self):
+        r = rng(9)
+        x = r.normal(size=(1536, 4)).astype(np.float32)
+        c = r.normal(size=(7, 4)).astype(np.float32)
+        _, counts = ops.kmeans_step(jnp.asarray(x), jnp.asarray(c), block_rows=512,
+                                    interpret=True)
+        assert float(jnp.sum(counts)) == 1536.0
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,hq,hkv,s,d", [
+        (1, 2, 1, 128, 64), (2, 4, 2, 256, 32), (1, 8, 2, 128, 128), (1, 1, 1, 512, 64),
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_sweep_shapes(self, b, hq, hkv, s, d, causal):
+        r = rng(b * s + hq)
+        q = r.normal(size=(b, hq, s, d)).astype(np.float32)
+        k = r.normal(size=(b, hkv, s, d)).astype(np.float32)
+        v = r.normal(size=(b, hkv, s, d)).astype(np.float32)
+        got = ops.attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            causal=causal, mode="pallas", interpret=True)
+        want = ref.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                                   causal=causal)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("window", [64, 128])
+    def test_sliding_window(self, window):
+        r = rng(3)
+        b, hq, hkv, s, d = 1, 2, 1, 256, 32
+        q = r.normal(size=(b, hq, s, d)).astype(np.float32)
+        k = r.normal(size=(b, hkv, s, d)).astype(np.float32)
+        v = r.normal(size=(b, hkv, s, d)).astype(np.float32)
+        got = ops.attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            causal=True, window=window, mode="pallas", interpret=True)
+        want = ref.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                                   causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+    def test_bf16(self):
+        r = rng(4)
+        b, hq, hkv, s, d = 1, 4, 4, 128, 64
+        q = jnp.asarray(r.normal(size=(b, hq, s, d)), jnp.bfloat16)
+        k = jnp.asarray(r.normal(size=(b, hkv, s, d)), jnp.bfloat16)
+        v = jnp.asarray(r.normal(size=(b, hkv, s, d)), jnp.bfloat16)
+        got = ops.attention(q, k, v, mode="pallas", interpret=True)
+        want = ref.flash_attention(q, k, v)
+        np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                                   np.asarray(want, dtype=np.float32), rtol=5e-2, atol=5e-2)
+
+    def test_chunked_matches_ref(self):
+        r = rng(5)
+        b, hq, hkv, s, d = 2, 4, 2, 256, 64
+        q = jnp.asarray(r.normal(size=(b, hq, s, d)), jnp.float32)
+        k = jnp.asarray(r.normal(size=(b, hkv, s, d)), jnp.float32)
+        v = jnp.asarray(r.normal(size=(b, hkv, s, d)), jnp.float32)
+        got = ops.chunked_attention(q, k, v, causal=True, block_k=64)
+        want = ref.flash_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+    def test_chunked_gradients_match_ref(self):
+        r = rng(6)
+        b, hq, hkv, s, d = 1, 2, 1, 128, 32
+        q = jnp.asarray(r.normal(size=(b, hq, s, d)), jnp.float32)
+        k = jnp.asarray(r.normal(size=(b, hkv, s, d)), jnp.float32)
+        v = jnp.asarray(r.normal(size=(b, hkv, s, d)), jnp.float32)
+
+        def loss_chunked(q, k, v):
+            return jnp.sum(ops.chunked_attention(q, k, v, causal=True, block_k=32) ** 2)
+
+        def loss_ref(q, k, v):
+            return jnp.sum(ref.flash_attention(q, k, v, causal=True) ** 2)
+
+        g1 = jax.grad(loss_chunked, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b_ in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=2e-3, atol=2e-3)
+
+    def test_decode_matches_full_forward_last_token(self):
+        r = rng(7)
+        b, hq, hkv, s, d = 2, 4, 2, 64, 32
+        q_full = jnp.asarray(r.normal(size=(b, hq, s, d)), jnp.float32)
+        k = jnp.asarray(r.normal(size=(b, hkv, s, d)), jnp.float32)
+        v = jnp.asarray(r.normal(size=(b, hkv, s, d)), jnp.float32)
+        full = ref.flash_attention(q_full, k, v, causal=True)
+        dec = ops.decode_attention(q_full[:, :, -1:, :], k, v, cache_len=s)
+        np.testing.assert_allclose(np.asarray(dec[:, :, 0]), np.asarray(full[:, :, -1]),
+                                   rtol=1e-4, atol=1e-4)

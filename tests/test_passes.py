@@ -1,0 +1,231 @@
+"""Rewriting passes: DCE, CSE, fusion, and the parallelization rewrite.
+
+The key property (paper §3.2): any transformation must preserve behaviour
+*as if executed on the abstract machine* — checked by interpreting original
+and rewritten programs on the same inputs.
+"""
+
+import numpy as np
+import pytest
+
+from repro.backends.interp import Interpreter
+from repro.core import Builder, Program, verify
+from repro.core.expr import AggSpec, col
+from repro.core.passes import (
+    CommonSubexpressionElimination, DeadCodeElimination, FuseKMeansStep,
+    Parallelize,
+)
+from repro.core.passes.rewriter import PassManager
+from repro.core.types import Atom, Bag, F32, Tensor, TupleType
+
+LINEITEM = TupleType.of(
+    l_quantity=F32, l_eprice=F32, l_disc=F32, l_shipdate=Atom("date"),
+)
+
+Q6_PRED = (
+    col("l_shipdate").between(8766, 9131)
+    & col("l_disc").between(0.05, 0.07)
+    & (col("l_quantity") < 24.0)
+)
+
+
+def q6_program() -> Program:
+    b = Builder("Tpch6Seq")
+    li = b.input("lineitem", Bag(LINEITEM))
+    filtered = b.emit1("rel.Select", [li], {"pred": Q6_PRED})
+    projected = b.emit1(
+        "rel.ExProj", [filtered], {"exprs": (("x", col("l_eprice") * col("l_disc")),)}
+    )
+    result = b.emit1("rel.Aggr", [projected], {"aggs": (AggSpec("sum", col("x"), "revenue"),)})
+    return b.finish(result)
+
+
+def lineitem_data(n=1000, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "l_quantity": rng.uniform(1, 50, n).astype(np.float32),
+        "l_eprice": rng.uniform(100, 10000, n).astype(np.float32),
+        "l_disc": np.round(rng.uniform(0.0, 0.1, n), 2).astype(np.float32),
+        "l_shipdate": rng.integers(8500, 9500, n).astype(np.int32),
+    }
+
+
+class TestInterpreter:
+    def test_q6_against_manual_numpy(self):
+        t = lineitem_data()
+        (out,) = Interpreter().run(q6_program(), t)
+        mask = (
+            (t["l_shipdate"] >= 8766) & (t["l_shipdate"] <= 9131)
+            & (t["l_disc"] >= 0.05) & (t["l_disc"] <= 0.07)
+            & (t["l_quantity"] < 24.0)
+        )
+        expected = np.sum((t["l_eprice"] * t["l_disc"])[mask].astype(np.float64))
+        assert out["revenue"] == pytest.approx(expected, rel=1e-6)
+
+
+class TestParallelize:
+    def test_q6_structure_matches_paper_alg2(self):
+        """After the rewrite, Q6 must look like paper Algorithm 2:
+        Split → ConcurrentExecute(Select;ExProj;pre-Aggr) → combine."""
+        p = Parallelize(n=4).apply(q6_program())
+        verify(p)
+        ops = [i.opcode for i in p.body]
+        assert "cf.Split" in ops and "cf.ConcurrentExecute" in ops
+        assert "rel.CombinePartials" in ops
+        # everything movable moved inside: no Select/ExProj/Aggr at top level
+        assert not any(o.startswith("rel.") for o in ops if o != "rel.CombinePartials")
+        ce = next(i for i in p.body if i.opcode == "cf.ConcurrentExecute")
+        inner_ops = [i.opcode for i in ce.param("P").body]
+        assert inner_ops == ["rel.Select", "rel.ExProj", "rel.Aggr"]
+
+    @pytest.mark.parametrize("n", [1, 2, 3, 8])
+    def test_q6_semantics_preserved(self, n):
+        t = lineitem_data(1013)  # deliberately not divisible by n
+        (orig,) = Interpreter().run(q6_program(), t)
+        par = Parallelize(n=n).apply(q6_program())
+        verify(par)
+        (out,) = Interpreter().run(par, t)
+        assert out["revenue"] == pytest.approx(orig["revenue"], rel=1e-9)
+
+    def test_groupby_parallelizes_with_merge_recombine(self):
+        b = Builder("grp")
+        li = b.input("lineitem", Bag(LINEITEM))
+        g = b.emit1("rel.GroupByAggr", [li], {
+            "keys": ("l_shipdate",),
+            "aggs": (AggSpec("sum", col("l_eprice"), "total"),
+                     AggSpec("count", col("l_eprice"), "n")),
+        })
+        p0 = b.finish(g)
+        t = lineitem_data(500)
+        (orig,) = Interpreter().run(p0, t)
+        par = Parallelize(n=4).apply(p0)
+        verify(par)
+        ops = [i.opcode for i in par.body]
+        # pre-aggregation inside, merge + combine-GroupByAggr outside
+        assert "cf.ConcurrentExecute" in ops
+        assert ops.count("rel.GroupByAggr") == 1
+        (out,) = Interpreter().run(par, t)
+        o_order = np.argsort(orig["l_shipdate"])
+        n_order = np.argsort(out["l_shipdate"])
+        np.testing.assert_allclose(
+            np.asarray(orig["total"])[o_order], np.asarray(out["total"])[n_order], rtol=1e-9
+        )
+        np.testing.assert_array_equal(
+            np.asarray(orig["n"])[o_order], np.asarray(out["n"])[n_order]
+        )
+
+    def test_unknown_instruction_left_outside(self):
+        """Paper: 'If an unknown instruction had been encountered, then the
+        rule would leave it as is.'"""
+        from repro.core.program import Instruction, Register
+
+        b = Builder("withunknown")
+        li = b.input("lineitem", Bag(LINEITEM))
+        filtered = b.emit1("rel.Select", [li], {"pred": Q6_PRED})
+        p0 = b.finish(filtered)
+        exotic_out = Register("exo0", filtered.type)
+        body = list(p0.body) + [Instruction("exotic.Op", (filtered,), (exotic_out,))]
+        p0 = p0.with_body(body).with_results((exotic_out,))
+
+        par = Parallelize(n=2).apply(p0)
+        verify(par)
+        ops = [i.opcode for i in par.body]
+        assert "exotic.Op" in ops  # still at top level
+        ce = next(i for i in par.body if i.opcode == "cf.ConcurrentExecute")
+        assert [i.opcode for i in ce.param("P").body] == ["rel.Select"]
+
+    def test_kmeans_broadcast_and_combine(self):
+        """LA flavor: X is split, centroids broadcast, partials summed."""
+        n, d, k = 240, 8, 5
+        b = Builder("kmeans_step")
+        X = b.input("X", Tensor(F32, (n, d)))
+        C = b.input("C", Tensor(F32, (k, d)))
+        sums, counts = b.emit("la.KMeansStep", [X, C])
+        p0 = b.finish(sums, counts)
+
+        rng = np.random.default_rng(1)
+        xv = rng.normal(size=(n, d)).astype(np.float32)
+        cv = rng.normal(size=(k, d)).astype(np.float32)
+        s0, c0 = Interpreter().run(p0, xv, cv)
+
+        par = Parallelize(n=4, targets={X.name}).apply(p0)
+        verify(par)
+        ops = [i.opcode for i in par.body]
+        assert "cf.Broadcast" in ops and ops.count("cf.CombineChunks") == 2
+        s1, c1 = Interpreter().run(par, xv, cv)
+        np.testing.assert_allclose(s0, s1, rtol=1e-6)
+        np.testing.assert_allclose(c0, c1, rtol=0)
+
+
+class TestFusion:
+    def test_kmeans_pipeline_fuses_to_step(self):
+        n, d, k = 96, 4, 3
+        b = Builder("kmeans_unfused")
+        X = b.input("X", Tensor(F32, (n, d)))
+        C = b.input("C", Tensor(F32, (k, d)))
+        dist = b.emit1("la.CDist2", [X, C])
+        lab = b.emit1("la.ArgMinRow", [dist])
+        sums = b.emit1("la.SegSum", [X, lab], {"k": k})
+        counts = b.emit1("la.SegCount", [lab], {"k": k})
+        p0 = b.finish(sums, counts)
+
+        fused = FuseKMeansStep().apply(p0)
+        verify(fused)
+        assert [i.opcode for i in fused.body] == ["la.KMeansStep"]
+
+        rng = np.random.default_rng(2)
+        xv = rng.normal(size=(n, d)).astype(np.float32)
+        cv = rng.normal(size=(k, d)).astype(np.float32)
+        s0, c0 = Interpreter().run(p0, xv, cv)
+        s1, c1 = Interpreter().run(fused, xv, cv)
+        np.testing.assert_allclose(s0, s1, rtol=1e-9)
+        np.testing.assert_allclose(c0, c1, rtol=0)
+
+
+class TestDceCse:
+    def test_dce_removes_dead_pure_chain(self):
+        b = Builder("dead")
+        li = b.input("lineitem", Bag(LINEITEM))
+        live = b.emit1("rel.Select", [li], {"pred": Q6_PRED})
+        dead = b.emit1("rel.ExProj", [li], {"exprs": (("y", col("l_disc") + 1.0),)})
+        _dead2 = b.emit1("rel.Select", [dead], {"pred": col("y") > 0.0})
+        p = b.finish(live)
+        out = DeadCodeElimination().apply(p)
+        verify(out)
+        assert [i.opcode for i in out.body] == ["rel.Select"]
+
+    def test_dce_keeps_unknown_ops(self):
+        from repro.core.program import Instruction, Register
+
+        b = Builder("u")
+        li = b.input("lineitem", Bag(LINEITEM))
+        filtered = b.emit1("rel.Select", [li], {"pred": Q6_PRED})
+        p = b.finish(filtered)
+        eff = Instruction("exotic.SideEffect", (li,), (Register("e0", Bag(LINEITEM)),))
+        p = p.with_body(list(p.body) + [eff])
+        out = DeadCodeElimination().apply(p)
+        assert any(i.opcode == "exotic.SideEffect" for i in out.body)
+
+    def test_cse_merges_identical_selects(self):
+        b = Builder("dup")
+        li = b.input("lineitem", Bag(LINEITEM))
+        s1 = b.emit1("rel.Select", [li], {"pred": Q6_PRED})
+        s2 = b.emit1("rel.Select", [li], {"pred": Q6_PRED})
+        a1 = b.emit1("rel.Aggr", [s1], {"aggs": (AggSpec("count", col("l_disc"), "n"),)})
+        a2 = b.emit1("rel.Aggr", [s2], {"aggs": (AggSpec("count", col("l_disc"), "n"),)})
+        p = b.finish(a1, a2)
+        out = PassManager([CommonSubexpressionElimination(), DeadCodeElimination()]).run(p)
+        ops = [i.opcode for i in out.body]
+        assert ops.count("rel.Select") == 1 and ops.count("rel.Aggr") == 1
+        assert out.results[0].name == out.results[1].name
+
+    def test_pipeline_equivalence_after_all_passes(self):
+        t = lineitem_data(750, seed=3)
+        p = q6_program()
+        pm = PassManager([
+            CommonSubexpressionElimination(), DeadCodeElimination(), Parallelize(n=3),
+        ])
+        out = pm.run(p)
+        (a,) = Interpreter().run(p, t)
+        (b_,) = Interpreter().run(out, t)
+        assert a["revenue"] == pytest.approx(b_["revenue"], rel=1e-9)

@@ -14,9 +14,7 @@ import numpy as np
 
 
 def bench(sf: float = 0.02, reps: int = 3, workers: int = 8):
-    from repro.backends.spmd import SpmdBackend
-    from repro.core.passes import Parallelize
-    from repro.core.passes.lower_vec import LowerRelToVec
+    from repro.compiler import compile as cvm_compile
     from repro.launch.mesh import make_mesh
     from repro.relational import tpch
 
@@ -36,10 +34,8 @@ def bench(sf: float = 0.02, reps: int = 3, workers: int = 8):
             seq_c(sources)
         seq_us = (time.time() - t0) / reps * 1e6
 
-        program = frame.program(qname)
-        program = Parallelize(n=workers).apply(program)
-        program = LowerRelToVec(ctx.catalog()).apply(program)
-        par_c = SpmdBackend(mesh).compile(program)
+        par_c = cvm_compile(frame.program(qname), target="spmd",
+                            parallel=workers, catalog=ctx.catalog(), mesh=mesh)
         par_c(sources)
         t0 = time.time()
         for _ in range(reps):

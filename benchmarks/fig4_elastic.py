@@ -15,10 +15,7 @@ import time
 
 
 def bench(sf: float = 0.02, reps: int = 3):
-    from repro.backends.spmd import SpmdBackend
-    from repro.core.passes import Parallelize
-    from repro.core.passes.lower_vec import LowerRelToVec
-    from repro.launch.mesh import make_mesh
+    from repro.backends.multipod import ElasticExecutor
     from repro.relational import tpch
 
     tables = tpch.generate(sf=sf, seed=0)
@@ -26,19 +23,16 @@ def bench(sf: float = 0.02, reps: int = 3):
     frame = tpch.QUERIES["q6"](ctx)
     sources = ctx.sources()
 
+    # the elastic facade: one frontend program, plans per topology through
+    # the unified driver (repeat topologies hit the structural plan cache)
+    ex = ElasticExecutor(program_builder=lambda: frame.program("q6"),
+                         catalog=ctx.catalog())
+
     rows = []
     base_us = None
     for workers in [1, 2, 4, 8]:
-        program = frame.program("q6")
-        if workers > 1:
-            program = Parallelize(n=workers).apply(program)
-        program = LowerRelToVec(ctx.catalog()).apply(program)
-        if workers > 1:
-            mesh = make_mesh((workers,), ("workers",))
-            compiled = SpmdBackend(mesh).compile(program)
-        else:
-            from repro.backends.local import LocalBackend
-            compiled = LocalBackend().compile(program)
+        ex.on_resize(workers)
+        compiled = ex.plan(workers)
         compiled(sources)
         t0 = time.time()
         for _ in range(reps):
@@ -49,14 +43,15 @@ def bench(sf: float = 0.02, reps: int = 3):
         rows.append((f"fig4_elastic_q6_w{workers}", us,
                      f"worker_seconds={cost:.4f};scaling_eff={base_us/(us*workers):.2f}"))
 
-    # elastic shrink event: the 8-worker plan's mesh loses a pod → re-plan at 4
+    # elastic shrink event: the 8-worker fleet loses half its pods → re-plan
+    # at 4; the topology was seen before, so the re-plan is a cache hit
     t0 = time.time()
-    program = Parallelize(n=4).apply(frame.program("q6"))
-    program = LowerRelToVec(ctx.catalog()).apply(program)
-    compiled = SpmdBackend(make_mesh((4,), ("workers",))).compile(program)
-    compiled(sources)
+    ex.on_resize(4)
+    replanned = ex.plan(4)
+    replanned(sources)
     replan_us = (time.time() - t0) * 1e6
-    rows.append(("fig4_elastic_replan_8to4", replan_us, "event=worker_loss;replanned=yes"))
+    rows.append(("fig4_elastic_replan_8to4", replan_us,
+                 f"event=worker_loss;replanned=yes;cache_hit={replanned.cache_hit}"))
     return rows
 
 

@@ -8,13 +8,20 @@ precede jax init):
   +AB   : + bf16 attention matmuls                 (compute/memory terms)
   +ABC  : + grouped-head decode (no KV repeat)     (collective term)
 
-Results → artifacts/perf_steps/<cell>__<step>.json and a markdown table on
+Also reports the compilation driver's per-pass instrumentation
+(``CompileResult.explain()``) for a representative analytics query on each
+in-process target, including the plan-cache effect of a repeated compile.
+
+Results → artifacts/perf_steps/<cell>__<step>.json,
+artifacts/perf_steps/compile_passes__<target>.json, and markdown tables on
 stdout.  Usage: PYTHONPATH=src:. python benchmarks/perf_steps.py
 """
 
 import json
+import os
 import subprocess
 import sys
+import time
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parents[1]
@@ -55,7 +62,9 @@ def run(arch, shape, step, env_over, probes=True):
     env_lines = "\n".join(f'os.environ["{k}"] = "{v}"' for k, v in env_over.items())
     code = SCRIPT.format(env_lines=env_lines, arch=arch, shape=shape,
                          probes=probes)
-    env = {"PYTHONPATH": f"{ROOT}/src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+    from repro.launch.hermetic import subprocess_env
+
+    env = subprocess_env(ROOT)
     proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
                           text=True, timeout=3000, env=env)
     if proc.returncode != 0:
@@ -64,8 +73,50 @@ def run(arch, shape, step, env_over, probes=True):
     return json.loads(line[3:])
 
 
+def compile_pass_report():
+    """Per-pass compile timings from the unified driver (in-process)."""
+    # this is the first jax init in the parent process; without a platform
+    # pin, containers with libtpu but no TPU hang in TPU init
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import numpy as np
+    from repro.compiler import PlanCache, compile as cvm_compile
+    from repro.core.expr import col
+    from repro.frontends.dataflow import Context, count_, sum_
+
+    rng = np.random.default_rng(0)
+    n = 65_536
+    ctx = Context(pad_to=1024)
+    ctx.register("sales", {
+        "region": rng.integers(0, 16, n).astype(np.int32),
+        "amount": rng.gamma(2.0, 50.0, n).astype(np.float32),
+        "year": rng.integers(2018, 2026, n).astype(np.int32),
+    })
+    q = (ctx.table("sales")
+         .filter(col("year") >= 2020)
+         .group_by("region", max_groups=16)
+         .agg(sum_("amount").as_("rev"), count_().as_("n")))
+    program = q.program("sales_by_region")
+
+    cache = PlanCache()
+    for target in ("interp", "local"):
+        res = cvm_compile(program, target=target, parallel=4,
+                          catalog=ctx.catalog(), cache=cache)
+        (OUT / f"compile_passes__{target}.json").write_text(
+            json.dumps(res.explain_records(), indent=2))
+        print(res.explain())
+        print()
+
+    t0 = time.perf_counter()
+    res = cvm_compile(program, target="local", parallel=4,
+                      catalog=ctx.catalog(), cache=cache)
+    lookup_ms = (time.perf_counter() - t0) * 1e3
+    print(f"[perf] repeated compile: cache_hit={res.cache_hit} "
+          f"lookup={lookup_ms:.3f} ms (first compile {res.total_s * 1e3:.2f} ms)")
+
+
 def main():
     OUT.mkdir(parents=True, exist_ok=True)
+    compile_pass_report()
     for arch, shape in CELLS:
         for step, env_over in STEPS.items():
             out = OUT / f"{arch}__{shape}__{step}.json"

@@ -13,6 +13,9 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.launch.hermetic import subprocess_env  # noqa: E402
 
 FIGS = [
     ("fig2_tpch_single", "benchmarks.fig2_tpch_single"),
@@ -24,11 +27,7 @@ FIGS = [
 
 
 def run_fig(module: str, timeout: int = 1800) -> str:
-    env = {
-        "PYTHONPATH": f"{ROOT}/src:{ROOT}",
-        "PATH": "/usr/bin:/bin",
-        "HOME": "/root",
-    }
+    env = subprocess_env(ROOT, extra_pythonpath=[ROOT])
     proc = subprocess.run([sys.executable, "-m", module], capture_output=True,
                           text=True, timeout=timeout, env=env, cwd=str(ROOT))
     if proc.returncode != 0:

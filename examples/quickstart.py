@@ -49,12 +49,27 @@ for i in range(len(seq["region"])):
           f"avg={seq['avg_amount'][i]:.1f} n={seq['n'][i]}")
 
 # -- 2. parallelized (paper Alg. 1 → Alg. 2) ------------------------------------
+# ctx.compile routes through the unified driver: one entry point per target,
+# declarative lowering path, per-pass instrumentation, structural plan cache.
 compiled = ctx.compile(q, parallel=4)
 print("\n== parallelized physical program (vec.* flavor, 4 workers) ==")
 print(compiled.program.render())
+print("\n== per-pass instrumentation ==")
+print(compiled.explain())
 par = q.collect(parallel=4)
 assert np.allclose(np.sort(seq["revenue"]), np.sort(par["revenue"]), rtol=1e-5)
 print("\nparallel == sequential ✓")
+
+# the abstract machine itself is a registered target — the oracle agrees
+oracle = q.collect(target="interp")
+assert np.allclose(np.sort(seq["revenue"]), np.sort(np.asarray(oracle["revenue"])),
+                   rtol=1e-5)
+print("interp (abstract machine) == sequential ✓")
+
+# recompiling the same frontend program is a structural-plan-cache hit
+again = ctx.compile(q, parallel=4)
+assert again.cache_hit and again.executable is compiled.executable
+print("repeated compile hit the plan cache ✓")
 
 # -- 3. scalar aggregate fuses into the single-pass kernel pipeline -------------
 q6ish = (

@@ -457,3 +457,35 @@ def _la_kmeans_step(interp, ins, args):
     np.add.at(sums, lab, x)
     counts = np.bincount(lab, minlength=k).astype(np.float64)
     return [sums, counts]
+
+
+# ---------------------------------------------------------------------------
+# backend facade (so "interp" is a registered compile target like the rest)
+# ---------------------------------------------------------------------------
+
+
+class InterpCompiled:
+    """Executable wrapper matching the backends' ``compiled(sources, *args)``
+    convention; each call runs a fresh Interpreter over the program."""
+
+    def __init__(self, program: Program, max_while_iters: int = 10_000) -> None:
+        self.program = program
+        self.max_while_iters = max_while_iters
+
+    def __call__(self, sources: Optional[Mapping[str, Any]] = None,
+                 *args: Any) -> List[Any]:
+        interp = Interpreter(sources=dict(sources or {}),
+                             max_while_iters=self.max_while_iters)
+        return interp.run(self.program, *args)
+
+
+class InterpBackend:
+    """The abstract machine as a backend: exact, slow, the oracle."""
+
+    name = "interp"
+
+    def __init__(self, max_while_iters: int = 10_000) -> None:
+        self.max_while_iters = max_while_iters
+
+    def compile(self, program: Program) -> InterpCompiled:
+        return InterpCompiled(program, max_while_iters=self.max_while_iters)

@@ -5,10 +5,11 @@ worker-seconds, survive workers vanishing.  On TPU the elastic unit is the
 pod ("pod" mesh axis, DCN-connected).  This facade owns that lifecycle:
 
   * ``plan(workers)`` compiles the frontend program for a given worker
-    count (re-running the parallelization rewrite — the program is
+    count through the unified compilation driver (the program is
     re-planned, never re-written by hand);
   * ``on_resize(new_workers)`` re-plans after an ElasticEvent (pod loss /
-    scale-up) — compiled plans are cached per worker count;
+    scale-up) — repeated plans for a topology hit the driver's structural
+    plan cache, so re-planning a previously seen worker count is near-free;
   * state (for training jobs) moves across topologies via the placement-
     agnostic checkpoints in ``distributed.checkpoint``.
 """
@@ -16,14 +17,10 @@ pod ("pod" mesh axis, DCN-connected).  This facade owns that lifecycle:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Optional, Tuple
 
-from ..core.passes import Parallelize
-from ..core.passes.lower_vec import Catalog, LowerRelToVec
+from ..core.passes.lower_vec import Catalog
 from ..core.program import Program
-from ..launch.mesh import make_mesh
-from .local import LocalBackend
-from .spmd import SpmdBackend
 
 
 @dataclass
@@ -34,27 +31,37 @@ class ElasticExecutor:
     catalog: Catalog
     axis: str = "workers"
     use_kernels: bool = False
-    _plans: Dict[int, Any] = field(default_factory=dict)
     workers: int = 1
+    cache: Optional[Any] = None   # PlanCache override; None → driver default
+    # hot-path memo so steady-state run() skips the rebuild+fingerprint of a
+    # driver-cache lookup; the driver cache still provides cross-topology and
+    # cross-executor reuse
+    _current: Optional[Tuple[int, Any]] = field(default=None, repr=False)
 
     def plan(self, workers: int):
-        if workers in self._plans:
-            return self._plans[workers]
+        """Compile for ``workers`` through the driver — no inline pass lists.
+
+        The driver's structural plan cache replaces the per-executor plan
+        table: the rebuilt frontend program fingerprints identically across
+        calls (alpha-invariance), so a repeated worker count is a cache hit.
+        """
+        from ..compiler import compile as cvm_compile
+
         program = self.program_builder()
-        if workers > 1:
-            program = Parallelize(n=workers).apply(program)
-        program = LowerRelToVec(self.catalog).apply(program)
-        if workers > 1:
-            mesh = make_mesh((workers,), (self.axis,))
-            compiled = SpmdBackend(mesh, axis=self.axis,
-                                   use_kernels=self.use_kernels).compile(program)
-        else:
-            compiled = LocalBackend(use_kernels=self.use_kernels).compile(program)
-        self._plans[workers] = compiled
-        return compiled
+        return cvm_compile(
+            program,
+            target="multipod" if workers > 1 else "local",
+            parallel=workers,
+            catalog=self.catalog,
+            axis=self.axis,
+            use_kernels=self.use_kernels,
+            cache=self.cache,
+        )
 
     def run(self, sources, *args):
-        return self.plan(self.workers)(sources, *args)
+        if self._current is None or self._current[0] != self.workers:
+            self._current = (self.workers, self.plan(self.workers))
+        return self._current[1](sources, *args)
 
     def on_resize(self, new_workers: int) -> None:
         """Elastic event: pod lost or fleet grown — next run uses the new plan."""

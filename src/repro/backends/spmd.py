@@ -24,96 +24,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..core import registry
-from ..core.program import Instruction, Program
-from ..core.passes.rewriter import ProgramRule
+from ..core.program import Program
+# The backend-specific rewritings (LowerToMesh, PushCombineIntoMesh) are
+# registered pipeline stages now — re-exported here for compatibility.
+from ..core.passes.mesh_lower import LowerToMesh, PushCombineIntoMesh  # noqa: F401
 from ..relational.runtime import VecTable
 from . import emit as base_emit
 from .emit import EvalCtx, evaluate_program
-
-
-# ---------------------------------------------------------------------------
-# backend-specific rewritings
-# ---------------------------------------------------------------------------
-
-
-class LowerToMesh(ProgramRule):
-    """cf.ConcurrentExecute → mesh.MeshExecute(axis)."""
-
-    name = "lower-to-mesh"
-
-    def __init__(self, axis: str = "workers") -> None:
-        self.axis = axis
-
-    def run(self, program: Program) -> Optional[Program]:
-        changed = False
-        body = []
-        for ins in program.body:
-            if ins.opcode == "cf.ConcurrentExecute":
-                ins = ins.with_opcode("mesh.MeshExecute").with_params(axis=self.axis)
-                changed = True
-            body.append(ins)
-        return program.with_body(body) if changed else None
-
-
-class PushCombineIntoMesh(ProgramRule):
-    """Pull a CombineChunks(sum)/CombinePartials following a MeshExecute into
-    the nested program as a mesh.AllReduce — pre-aggregation as collective."""
-
-    name = "push-combine-into-mesh"
-
-    def run(self, program: Program) -> Optional[Program]:
-        producers = program.producers()
-        for y in program.body:
-            if y.opcode not in ("cf.CombineChunks", "rel.CombinePartials"):
-                continue
-            if y.opcode == "cf.CombineChunks" and y.param("op") != "sum":
-                continue
-            src = y.inputs[0]
-            me = producers.get(src.name)
-            if me is None or me.opcode != "mesh.MeshExecute":
-                continue
-            if program.uses(src) != 1:
-                continue
-            idx = list(r.name for r in me.outputs).index(src.name)
-            inner: Program = me.param("P")
-            axis = me.param("axis")
-
-            from ..core.program import Register
-            from ..core.ops.controlflow import split_type
-
-            res = inner.results[idx]
-            red = Register(res.name + "_ar", res.type)
-            if y.opcode == "rel.CombinePartials":
-                ar = Instruction("mesh.AllReduce", (res,), (red,),
-                                 (("op", "combine_aggs"), ("axis", axis),
-                                  ("aggs", y.param("aggs"))))
-            else:
-                ar = Instruction("mesh.AllReduce", (res,), (red,),
-                                 (("op", "sum"), ("axis", axis)))
-            new_inner = Program(
-                name=inner.name, inputs=inner.inputs,
-                body=inner.body + (ar,),
-                results=tuple(red if i == idx else r for i, r in enumerate(inner.results)),
-            )
-            new_me_outs = list(me.outputs)
-            new_me_outs[idx] = Register(src.name + "_rep", split_type(red.type, src.type.attr("n")))
-            new_me = Instruction("mesh.MeshExecute", me.inputs, tuple(new_me_outs),
-                                 (("P", new_inner), ("axis", axis)))
-            take = Instruction("cf.TakeChunk", (new_me_outs[idx],), y.outputs, (("i", 0),))
-            new_body = []
-            for ins in program.body:
-                if ins is me:
-                    new_body.append(new_me)
-                elif ins is y:
-                    new_body.append(take)
-                else:
-                    if any(r.name == src.name for r in ins.inputs):
-                        ins = ins.with_inputs([new_me_outs[idx] if r.name == src.name else r
-                                               for r in ins.inputs])
-                    new_body.append(ins)
-            return program.with_body(new_body)
-        return None
 
 
 # ---------------------------------------------------------------------------
@@ -128,6 +45,18 @@ def spmd_emitter(opcode: str):
         _SPMD_EMIT[opcode] = fn
         return fn
     return deco
+
+
+def _shard_map(body, mesh, in_specs, out_specs):
+    """jax.shard_map moved out of jax.experimental (and check_vma was called
+    check_rep) across jax releases — paper over both spellings."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map as esm
+    return esm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 def _stack_split(v: Any, n: int) -> Any:
@@ -224,9 +153,8 @@ def _mesh_execute(ctx, ins, args):
         return tuple(jax.tree_util.tree_map(lambda x: jnp.asarray(x)[None], o)
                      for o in outs)
 
-    shard_fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                             out_specs=tuple(out_specs for _ in p.results),
-                             check_vma=False)
+    shard_fn = _shard_map(body, mesh, in_specs,
+                          tuple(out_specs for _ in p.results))
     outs = shard_fn(*values)
     return list(outs)
 
@@ -325,17 +253,22 @@ class SpmdBackend:
     name = "spmd"
 
     def __init__(self, mesh: Mesh, axis: str = "workers", use_kernels: bool = False,
-                 collectives: bool = True, jit: bool = True) -> None:
+                 collectives: bool = True, jit: bool = True,
+                 rewrite: bool = True) -> None:
         self.mesh = mesh
         self.axis = axis
         self.use_kernels = use_kernels
         self.collectives = collectives
         self.jit = jit
+        # standalone use still rewrites here; the compilation driver runs the
+        # same rules as pipeline stages and passes rewrite=False
+        self.rewrite = rewrite
 
     def compile(self, program: Program) -> SpmdCompiled:
-        program = LowerToMesh(self.axis).apply(program)
-        if self.collectives:
-            program = PushCombineIntoMesh().apply(program)
+        if self.rewrite:
+            program = LowerToMesh(self.axis).apply(program)
+            if self.collectives:
+                program = PushCombineIntoMesh().apply(program)
 
         def run(sources: Dict[str, Any], *args: Any) -> List[Any]:
             ctx = EvalCtx(sources=sources, use_kernels=self.use_kernels,

@@ -1,0 +1,30 @@
+"""The CVM compilation driver subsystem.
+
+Three pieces (see docs/compiler.md):
+
+* :mod:`repro.compiler.targets` — the backend target registry with
+  declarative, flavor-aware lowering paths;
+* :mod:`repro.compiler.driver` — the single ``compile()`` entry point with
+  per-pass instrumentation and the structural plan cache;
+* :mod:`repro.compiler.fingerprint` — alpha-renaming-invariant structural
+  fingerprints of ``Program`` trees (the cache's content address).
+"""
+
+from .driver import (  # noqa: F401
+    PLAN_CACHE,
+    CompileResult,
+    PassRecord,
+    PlanCache,
+    compile,
+    program_size,
+    run_passes,
+)
+from .fingerprint import canonicalize, fingerprint, fingerprint_value  # noqa: F401
+from .targets import (  # noqa: F401
+    CompileOptions,
+    Stage,
+    Target,
+    available_targets,
+    get_target,
+    register_target,
+)

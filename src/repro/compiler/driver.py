@@ -1,0 +1,317 @@
+"""Unified compilation driver: one entry point for every backend.
+
+``compile(program, target="spmd", parallel=8)`` looks up the registered
+:class:`~repro.compiler.targets.Target`, consults the structural plan cache
+(keyed by the alpha-invariant program fingerprint + the option cache key),
+runs the target's declarative lowering path with per-pass instrumentation
+(wall time + IR-size delta), hands the final program to the backend, and
+caches the resulting :class:`CompileResult`.
+
+Every frontend routes here: ``Context.compile`` (dataflow + SQL frontends)
+and ``ElasticExecutor.plan`` (multipod) contain no inline pass lists, and
+the tensor frontend's planning rewrites run through :func:`run_passes` so
+they are instrumented the same way.
+"""
+
+from __future__ import annotations
+
+import time
+import warnings
+from collections import OrderedDict
+from dataclasses import dataclass, replace
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+from ..core.program import Program
+from ..core.verify import verify
+from .fingerprint import fingerprint
+from .targets import CompileOptions, get_target, target_epoch
+
+__all__ = [
+    "compile", "run_passes", "program_size",
+    "CompileResult", "PassRecord", "PlanCache", "PLAN_CACHE",
+]
+
+
+# ---------------------------------------------------------------------------
+# instrumentation
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PassRecord:
+    """One pass execution: where it ran, how long, and what it did to the IR."""
+
+    stage: str
+    name: str
+    wall_s: float
+    size_before: int
+    size_after: int
+
+    @property
+    def delta(self) -> int:
+        return self.size_after - self.size_before
+
+
+def program_size(program: Program) -> int:
+    """Total instruction count, including nested programs."""
+    return sum(len(p.body) for p in program.walk())
+
+
+def run_passes(program: Program, passes: Sequence[Any], stage: str = "pipeline",
+               records: Optional[List[PassRecord]] = None,
+               check: bool = True) -> Program:
+    """Apply passes in order, timing each and verifying between them.
+
+    The shared instrumented runner: the driver uses it per stage, and
+    frontends with their own planning rewrites (tensor) call it directly so
+    their passes are measured identically.
+    """
+    for p in passes:
+        before = program_size(program)
+        t0 = time.perf_counter()
+        out = p.apply(program)
+        wall = time.perf_counter() - t0
+        if check:
+            try:
+                verify(out, allow_unknown_ops=True)
+            except Exception as e:
+                raise AssertionError(
+                    f"pass {p.name!r} broke the program:\n{out.render()}"
+                ) from e
+        if records is not None:
+            records.append(PassRecord(stage, p.name, wall, before,
+                                      program_size(out)))
+        program = out
+    return program
+
+
+# ---------------------------------------------------------------------------
+# compile results
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CompileResult:
+    """A compiled plan: callable executable + full compilation provenance."""
+
+    target: str
+    source: Program            # frontend program as handed to the driver
+    program: Program           # final lowered program the backend consumed
+    executable: Any            # backend-compiled callable
+    records: Tuple[PassRecord, ...]
+    fingerprint: str
+    backend_s: float = 0.0
+    cache_hit: bool = False
+
+    def __call__(self, sources: Any = None, *args: Any) -> Any:
+        return self.executable(sources, *args)
+
+    @property
+    def total_s(self) -> float:
+        return self.backend_s + sum(r.wall_s for r in self.records)
+
+    def explain(self) -> str:
+        """Per-pass wall time and IR-size deltas as a markdown table."""
+        head = (f"compile[{self.target}] {self.source.name}: "
+                + ("cache hit" if self.cache_hit
+                   else f"{self.total_s * 1e3:.2f} ms")
+                + f" (fingerprint {self.fingerprint[:12]})")
+        lines = [head,
+                 "| stage | pass | wall ms | IR size | Δ |",
+                 "|---|---|---:|---:|---:|"]
+        for r in self.records:
+            lines.append(f"| {r.stage} | {r.name} | {r.wall_s * 1e3:.3f} "
+                         f"| {r.size_after} | {r.delta:+d} |")
+        lines.append(f"| backend | {self.target} | {self.backend_s * 1e3:.3f} "
+                     f"| {program_size(self.program)} | +0 |")
+        return "\n".join(lines)
+
+    def explain_records(self) -> List[Dict[str, Any]]:
+        """The same data as :meth:`explain`, as JSON-ready records."""
+        size = program_size(self.program)
+        recs = [
+            {"stage": r.stage, "pass": r.name, "wall_s": r.wall_s,
+             "size_before": r.size_before, "size_after": r.size_after}
+            for r in self.records
+        ]
+        recs.append({"stage": "backend", "pass": self.target,
+                     "wall_s": self.backend_s,
+                     "size_before": size, "size_after": size})
+        return recs
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+
+class PlanCache:
+    """LRU cache of CompileResults keyed by (target, fingerprint, options)."""
+
+    def __init__(self, capacity: int = 256) -> None:
+        self.capacity = capacity
+        self._entries: "OrderedDict[Tuple, CompileResult]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def lookup(self, key: Tuple) -> Optional[CompileResult]:
+        got = self._entries.get(key)
+        if got is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return got
+
+    def store(self, key: Tuple, result: CompileResult) -> None:
+        self._entries[key] = result
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._entries)}
+
+
+#: process-wide default cache — repeated compiles of the same frontend
+#: program (serve paths, elastic re-planning) are near-free
+PLAN_CACHE = PlanCache()
+
+
+# ---------------------------------------------------------------------------
+# the entry point
+# ---------------------------------------------------------------------------
+
+
+def compile(program: Program, target: str = "local", *,
+            parallel: Optional[int] = None,
+            catalog: Any = None,
+            use_kernels: bool = False,
+            fuse: bool = True,
+            axis: str = "workers",
+            mesh: Any = None,
+            jit: bool = True,
+            collectives: bool = True,
+            parallelize_targets: Optional[Sequence[str]] = None,
+            cache: Union[None, bool, PlanCache] = None,
+            backend: Any = None,
+            check: bool = True) -> CompileResult:
+    """Compile a frontend CVM program for a registered target.
+
+    ``cache``: ``None``/``True`` → the process-wide :data:`PLAN_CACHE`;
+    ``False`` → no caching; a :class:`PlanCache` → that cache.  An explicit
+    ``backend`` instance overrides the target's factory and bypasses the
+    cache (its configuration is invisible to the key).
+    """
+    tgt = get_target(target)
+    opts = CompileOptions(
+        parallel=parallel, use_kernels=use_kernels, fuse=fuse, axis=axis,
+        jit=jit, collectives=collectives, catalog=catalog, mesh=mesh,
+        parallelize_targets=(tuple(sorted(parallelize_targets))
+                             if parallelize_targets else None),
+    )
+    _check_parallel_divides(program, opts)
+    _check_mesh_available(tgt, opts)
+
+    fp = fingerprint(program)
+    if cache is False:
+        plan_cache: Optional[PlanCache] = None
+    elif cache is None or cache is True:
+        plan_cache = PLAN_CACHE
+    else:
+        plan_cache = cache
+    use_cache = plan_cache is not None and backend is None
+
+    key: Optional[Tuple] = None
+    if use_cache:
+        key = (tgt.name, target_epoch(tgt.name), fp, opts.cache_key())
+        hit = plan_cache.lookup(key)
+        if hit is not None:
+            return replace(hit, cache_hit=True)
+
+    records: List[PassRecord] = []
+    lowered = program
+    for stage in tgt.lowering_path:
+        lowered = run_passes(lowered, stage.build(opts), stage=stage.name,
+                             records=records, check=check)
+
+    _check_flavors(lowered, tgt)
+
+    be = backend if backend is not None else tgt.make_backend(opts)
+    t0 = time.perf_counter()
+    executable = be.compile(lowered)
+    backend_s = time.perf_counter() - t0
+
+    result = CompileResult(
+        target=tgt.name,
+        source=program,
+        program=getattr(executable, "program", lowered),
+        executable=executable,
+        records=tuple(records),
+        fingerprint=fp,
+        backend_s=backend_s,
+    )
+    if use_cache and key is not None:
+        plan_cache.store(key, result)
+    return result
+
+
+def _check_parallel_divides(program: Program, opts: CompileOptions) -> None:
+    """Fail early, with the table named, instead of deep inside the typing
+    rules: a worker count must divide every scanned table's padded capacity."""
+    catalog = opts.catalog
+    if not opts.parallel or opts.parallel <= 1 or catalog is None:
+        return
+    capacities = getattr(catalog, "capacities", None) or {}
+    scanned = [ins.param("table") for p in program.walk() for ins in p.body
+               if ins.opcode in ("rel.Scan", "vec.ScanVec")]
+    bad = {t: capacities[t] for t in scanned
+           if t in capacities and capacities[t] % opts.parallel != 0}
+    if bad:
+        listing = ", ".join(f"{t} (capacity {c})" for t, c in sorted(bad.items()))
+        raise ValueError(
+            f"parallel={opts.parallel} does not divide the padded capacity of "
+            f"{listing}; pick a worker count that divides the capacities or "
+            "adjust Context(pad_to=...)")
+
+
+def _check_mesh_available(tgt: Any, opts: CompileOptions) -> None:
+    """Mesh-backed targets fail at the driver, naming the shortfall, rather
+    than deep inside jax mesh construction."""
+    if not tgt.needs_mesh or opts.mesh is not None:
+        return
+    import jax
+
+    needed = opts.parallel or 1
+    available = jax.device_count()
+    if needed > available:
+        raise ValueError(
+            f"target {tgt.name!r} needs a {needed}-device mesh but only "
+            f"{available} device(s) are visible; pass mesh=... or set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={needed} "
+            "before jax initializes")
+
+
+def _check_flavors(program: Program, tgt: Any) -> None:
+    """Soft check: the lowered program should only use flavors the target
+    declared.  Unknown/exotic flavors warn rather than fail — passes are
+    required to leave unknown instructions alone, and backends may still
+    know how to execute them."""
+    seen = {op.split(".", 1)[0] for op in program.opcodes() if "." in op}
+    extra = seen - set(tgt.flavors)
+    if extra:
+        warnings.warn(
+            f"target {tgt.name!r} received IR flavors {sorted(extra)} outside "
+            f"its declared set {list(tgt.flavors)}",
+            stacklevel=3,
+        )

@@ -1,0 +1,252 @@
+"""Backend target registry: declarative, flavor-aware lowering paths.
+
+The paper's claim (§3.5–§3.6) is that rewriting pipelines are "highly
+flexible and configurable, such that every frontend/backend combination can
+do the rewritings that are best suited for that combination".  This module
+makes that concrete: each backend registers a :class:`Target` declaring
+
+  * its name (``interp`` / ``local`` / ``spmd`` / ``multipod`` / ...),
+  * the IR flavors its executables accept after lowering,
+  * a declarative *lowering path* — an ordered tuple of :class:`Stage`
+    factories that, given the :class:`CompileOptions`, produce the rewrite
+    passes to run (canonicalize → optional parallelize → flavor lowering →
+    fusion → backend-specific rules such as ``LowerToMesh``),
+  * how to construct the backend object, and
+  * what kind of source collections its executables consume.
+
+Adding a backend is now: implement emitters, then ``register_target`` a
+lowering path — no new copy of the pipeline anywhere.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+from ..core.passes import (
+    CommonSubexpressionElimination,
+    DeadCodeElimination,
+    FuseSelectAgg,
+    LowerToMesh,
+    Parallelize,
+    PushCombineIntoMesh,
+)
+from ..core.passes.lower_vec import Catalog, LowerRelToVec
+
+__all__ = [
+    "CompileOptions", "Stage", "Target",
+    "register_target", "get_target", "available_targets",
+    "CANONICALIZE", "PARALLELIZE", "LOWER_REL_TO_VEC", "FUSE", "LOWER_TO_MESH",
+]
+
+
+# ---------------------------------------------------------------------------
+# options
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CompileOptions:
+    """Everything a lowering path may depend on — and the plan-cache key covers."""
+
+    parallel: Optional[int] = None
+    use_kernels: bool = False
+    fuse: bool = True
+    axis: str = "workers"
+    jit: bool = True
+    collectives: bool = True
+    catalog: Optional[Catalog] = None
+    mesh: Any = None
+    parallelize_targets: Optional[Tuple[str, ...]] = None
+
+    def cache_key(self) -> Tuple:
+        cat = None
+        if self.catalog is not None:
+            cat = (tuple(sorted(self.catalog.capacities.items())),
+                   self.catalog.default_max_groups,
+                   self.catalog.join_selectivity)
+        mesh_key = None
+        if self.mesh is not None:
+            axis_names = tuple(getattr(self.mesh, "axis_names", ()))
+            shape = getattr(self.mesh, "shape", None)
+            if hasattr(shape, "items"):
+                shape = tuple(shape.items())
+            devices = getattr(self.mesh, "devices", None)
+            # device identity matters: an equally-shaped mesh over different
+            # devices must not reuse an executable bound to the old devices
+            dev_ids = (tuple(int(d.id) for d in devices.flat)
+                       if devices is not None else None)
+            mesh_key = (axis_names, shape, dev_ids)
+        return (self.parallel, self.use_kernels, self.fuse, self.axis,
+                self.jit, self.collectives, self.parallelize_targets,
+                cat, mesh_key)
+
+
+# ---------------------------------------------------------------------------
+# stages
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Stage:
+    """One named step of a lowering path: options → a sequence of passes.
+
+    A "pass" here is anything with ``.name`` and ``.apply(program)`` —
+    fixpoint rules (:class:`~repro.core.passes.rewriter.Pass`) and one-shot
+    reconstructions (:class:`~repro.core.passes.lower_vec.LowerRelToVec`)
+    alike.  Returning ``[]`` makes the stage a no-op for these options.
+    """
+
+    name: str
+    build: Callable[[CompileOptions], Sequence[Any]]
+
+
+def _canonicalize(opts: CompileOptions) -> Sequence[Any]:
+    return [CommonSubexpressionElimination(), DeadCodeElimination()]
+
+
+def _parallelize(opts: CompileOptions) -> Sequence[Any]:
+    if opts.parallel and opts.parallel > 1:
+        targets = set(opts.parallelize_targets) if opts.parallelize_targets else None
+        return [Parallelize(n=opts.parallel, targets=targets)]
+    return []
+
+
+def _lower_rel_to_vec(opts: CompileOptions) -> Sequence[Any]:
+    return [LowerRelToVec(opts.catalog if opts.catalog is not None else Catalog())]
+
+
+def _fuse(opts: CompileOptions) -> Sequence[Any]:
+    if opts.fuse:
+        return [FuseSelectAgg(), DeadCodeElimination()]
+    return []
+
+
+def _lower_to_mesh(opts: CompileOptions) -> Sequence[Any]:
+    rules: list = [LowerToMesh(opts.axis)]
+    if opts.collectives:
+        rules.append(PushCombineIntoMesh())
+    return rules
+
+
+CANONICALIZE = Stage("canonicalize", _canonicalize)
+PARALLELIZE = Stage("parallelize", _parallelize)
+LOWER_REL_TO_VEC = Stage("lower-rel-to-vec", _lower_rel_to_vec)
+FUSE = Stage("fuse", _fuse)
+LOWER_TO_MESH = Stage("lower-to-mesh", _lower_to_mesh)
+
+
+# ---------------------------------------------------------------------------
+# targets
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Target:
+    """A registered backend: lowering path + backend factory + data model."""
+
+    name: str
+    flavors: Tuple[str, ...]
+    lowering_path: Tuple[Stage, ...]
+    make_backend: Callable[[CompileOptions], Any]
+    source_kind: str = "vec"  # "vec" (VecTable sources) | "numpy" (raw columns)
+    needs_mesh: bool = False
+
+
+_TARGETS: Dict[str, Target] = {}
+_EPOCHS: Dict[str, int] = {}
+
+
+def register_target(target: Target, overwrite: bool = False) -> Target:
+    if target.name in _TARGETS and not overwrite:
+        raise ValueError(f"target {target.name!r} already registered")
+    _TARGETS[target.name] = target
+    # bump the registration epoch so plan-cache entries compiled under a
+    # previous lowering path for this name can never be served again
+    _EPOCHS[target.name] = _EPOCHS.get(target.name, 0) + 1
+    return target
+
+
+def target_epoch(name: str) -> int:
+    return _EPOCHS.get(name, 0)
+
+
+def get_target(name: str) -> Target:
+    try:
+        return _TARGETS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown compile target {name!r}; registered: {sorted(_TARGETS)}"
+        ) from None
+
+
+def available_targets() -> Dict[str, Target]:
+    return dict(sorted(_TARGETS.items()))
+
+
+# ---------------------------------------------------------------------------
+# built-in backends
+# ---------------------------------------------------------------------------
+
+
+def _make_interp(opts: CompileOptions) -> Any:
+    from ..backends.interp import InterpBackend
+    return InterpBackend()
+
+
+def _make_local(opts: CompileOptions) -> Any:
+    from ..backends.local import LocalBackend
+    return LocalBackend(use_kernels=opts.use_kernels, jit=opts.jit)
+
+
+def _make_spmd(opts: CompileOptions) -> Any:
+    from ..backends.spmd import SpmdBackend
+    mesh = opts.mesh
+    if mesh is None:
+        from ..launch.mesh import make_mesh
+        mesh = make_mesh((opts.parallel or 1,), (opts.axis,))
+    # rewrite=False: the driver already ran LowerToMesh/PushCombineIntoMesh
+    # as registered pipeline stages
+    return SpmdBackend(mesh, axis=opts.axis, use_kernels=opts.use_kernels,
+                       collectives=opts.collectives, jit=opts.jit,
+                       rewrite=False)
+
+
+register_target(Target(
+    name="interp",
+    flavors=("rel", "cf", "df", "la", "mesh", "tz"),
+    lowering_path=(CANONICALIZE, PARALLELIZE),
+    make_backend=_make_interp,
+    source_kind="numpy",
+))
+
+register_target(Target(
+    name="local",
+    flavors=("vec", "cf", "rel", "df", "la", "tz"),
+    lowering_path=(CANONICALIZE, PARALLELIZE, LOWER_REL_TO_VEC, FUSE),
+    make_backend=_make_local,
+    source_kind="vec",
+))
+
+register_target(Target(
+    name="spmd",
+    flavors=("vec", "cf", "rel", "la", "mesh"),
+    lowering_path=(CANONICALIZE, PARALLELIZE, LOWER_REL_TO_VEC, FUSE,
+                   LOWER_TO_MESH),
+    make_backend=_make_spmd,
+    source_kind="vec",
+    needs_mesh=True,
+))
+
+# The multipod (Lambada-analogue) target shares the SPMD lowering path; the
+# elastic facade (ElasticExecutor) re-enters the driver per worker count and
+# relies on the structural plan cache instead of its own plan table.
+register_target(Target(
+    name="multipod",
+    flavors=("vec", "cf", "rel", "la", "mesh"),
+    lowering_path=(CANONICALIZE, PARALLELIZE, LOWER_REL_TO_VEC, FUSE,
+                   LOWER_TO_MESH),
+    make_backend=_make_spmd,
+    source_kind="vec",
+    needs_mesh=True,
+))

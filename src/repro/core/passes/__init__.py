@@ -7,8 +7,11 @@ presence of collection types and instructions of *any* flavor: rules that
 don't understand an instruction leave it as is.
 """
 
-from .rewriter import InstructionRule, Pass, PassManager, ProgramRule  # noqa: F401
+from .rewriter import (  # noqa: F401
+    FixpointWarning, InstructionRule, Pass, PassManager, ProgramRule,
+)
 from .dce import DeadCodeElimination  # noqa: F401
 from .cse import CommonSubexpressionElimination  # noqa: F401
 from .parallelize import Parallelize  # noqa: F401
 from .fusion import FuseKMeansStep, FuseSelectAgg  # noqa: F401
+from .mesh_lower import LowerToMesh, PushCombineIntoMesh  # noqa: F401

@@ -1,0 +1,101 @@
+"""Mesh-flavor lowering rules (the SPMD backend's pipeline stages).
+
+These are *backend-specific rewritings* (paper §3.6: every frontend/backend
+combination gets the rewritings best suited for it).  They used to live
+inside the SPMD backend's ``compile``; now they are ordinary passes that the
+compilation driver registers as the tail of the ``spmd``/``multipod``
+lowering paths (see ``repro.compiler.targets``):
+
+  * ``LowerToMesh`` — ``cf.ConcurrentExecute`` → ``mesh.MeshExecute(axis)``:
+    the chunk axis becomes a named mesh axis, so the nested program runs
+    under ``jax.shard_map`` as ONE SPMD program for all workers.
+  * ``PushCombineIntoMesh`` — a ``CombineChunks(sum)``/``CombinePartials``
+    following a MeshExecute is pulled inside the nested program as a
+    ``mesh.AllReduce`` — the paper's pre-aggregation becoming a collective
+    instead of a gather+reduce.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from ..program import Instruction, Program, Register
+from .rewriter import ProgramRule
+
+
+class LowerToMesh(ProgramRule):
+    """cf.ConcurrentExecute → mesh.MeshExecute(axis)."""
+
+    name = "lower-to-mesh"
+
+    def __init__(self, axis: str = "workers") -> None:
+        self.axis = axis
+
+    def run(self, program: Program) -> Optional[Program]:
+        changed = False
+        body = []
+        for ins in program.body:
+            if ins.opcode == "cf.ConcurrentExecute":
+                ins = ins.with_opcode("mesh.MeshExecute").with_params(axis=self.axis)
+                changed = True
+            body.append(ins)
+        return program.with_body(body) if changed else None
+
+
+class PushCombineIntoMesh(ProgramRule):
+    """Pull a CombineChunks(sum)/CombinePartials following a MeshExecute into
+    the nested program as a mesh.AllReduce — pre-aggregation as collective."""
+
+    name = "push-combine-into-mesh"
+
+    def run(self, program: Program) -> Optional[Program]:
+        producers = program.producers()
+        for y in program.body:
+            if y.opcode not in ("cf.CombineChunks", "rel.CombinePartials"):
+                continue
+            if y.opcode == "cf.CombineChunks" and y.param("op") != "sum":
+                continue
+            src = y.inputs[0]
+            me = producers.get(src.name)
+            if me is None or me.opcode != "mesh.MeshExecute":
+                continue
+            if program.uses(src) != 1:
+                continue
+            idx = list(r.name for r in me.outputs).index(src.name)
+            inner: Program = me.param("P")
+            axis = me.param("axis")
+
+            from ..ops.controlflow import split_type
+
+            res = inner.results[idx]
+            red = Register(res.name + "_ar", res.type)
+            if y.opcode == "rel.CombinePartials":
+                ar = Instruction("mesh.AllReduce", (res,), (red,),
+                                 (("op", "combine_aggs"), ("axis", axis),
+                                  ("aggs", y.param("aggs"))))
+            else:
+                ar = Instruction("mesh.AllReduce", (res,), (red,),
+                                 (("op", "sum"), ("axis", axis)))
+            new_inner = Program(
+                name=inner.name, inputs=inner.inputs,
+                body=inner.body + (ar,),
+                results=tuple(red if i == idx else r for i, r in enumerate(inner.results)),
+            )
+            new_me_outs = list(me.outputs)
+            new_me_outs[idx] = Register(src.name + "_rep", split_type(red.type, src.type.attr("n")))
+            new_me = Instruction("mesh.MeshExecute", me.inputs, tuple(new_me_outs),
+                                 (("P", new_inner), ("axis", axis)))
+            take = Instruction("cf.TakeChunk", (new_me_outs[idx],), y.outputs, (("i", 0),))
+            new_body = []
+            for ins in program.body:
+                if ins is me:
+                    new_body.append(new_me)
+                elif ins is y:
+                    new_body.append(take)
+                else:
+                    if any(r.name == src.name for r in ins.inputs):
+                        ins = ins.with_inputs([new_me_outs[idx] if r.name == src.name else r
+                                               for r in ins.inputs])
+                    new_body.append(ins)
+            return program.with_body(new_body)
+        return None

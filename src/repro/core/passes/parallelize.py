@@ -21,7 +21,7 @@ is") — they simply stay outside the ConcurrentExecute.
 from __future__ import annotations
 
 import itertools
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 from .. import registry
 from ..expr import AggSpec, col
@@ -184,6 +184,10 @@ class Parallelize(ProgramRule):
             spec = registry.lookup(y.opcode)
             if spec is None or not (spec.elementwise or spec.aggregation):
                 continue
+            if y.param("recombine"):
+                # the combiner this rewrite itself emitted: absorbing it again
+                # would ping-pong forever (pre-aggregate → recombine → ...)
+                continue
             if not y.inputs:
                 continue
             # first input must be a single-use Merge of a CE output
@@ -310,9 +314,13 @@ class Parallelize(ProgramRule):
             combine = tuple(AggSpec(a.combine_fn, col(a.name), a.name) for a in aggs)
             m = Register(_fresh(taken, "gm"), infer_output_types("cf.Merge", {}, [op_outs[0].type])[0])
             outer.append(Instruction("cf.Merge", (op_outs[0],), (m,)))
+            recombine_params: Tuple[Tuple[str, Any], ...] = (
+                ("keys", keys), ("aggs", combine), ("recombine", True))
+            if y.param("max_groups"):
+                recombine_params += (("max_groups", y.param("max_groups")),)
             outer.append(
                 Instruction("rel.GroupByAggr", (m,), (y.outputs[0],),
-                            (("keys", keys), ("aggs", combine)))
+                            recombine_params)
             )
         elif agg["kind"] == "segmented":
             for yr, er in zip(y.outputs, op_outs):

@@ -14,11 +14,16 @@ into nested programs, verifying after each pass when ``check=True``.
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence
 
 from ..program import Instruction, Program
 from ..verify import verify
+
+
+class FixpointWarning(UserWarning):
+    """A pass hit its iteration bound while still reporting changes."""
 
 
 class Pass:
@@ -42,6 +47,15 @@ class Pass:
             cur = nxt
             if self.recurse:
                 cur = self._recurse_nested(cur, max_iters)
+        # the loop exhausted its budget: a silent half-rewritten program is a
+        # debugging trap, so probe once more and complain if still changing
+        if self.run(cur) is not None:
+            warnings.warn(
+                f"pass {self.name!r} hit max_iters={max_iters} while still "
+                "reporting changes; returning the partially rewritten program",
+                FixpointWarning,
+                stacklevel=2,
+            )
         return cur
 
     def _recurse_nested(self, program: Program, max_iters: int) -> Program:

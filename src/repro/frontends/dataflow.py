@@ -170,9 +170,10 @@ class Frame:
         return p
 
     def collect(self, parallel: Optional[int] = None, use_kernels: bool = False,
-                backend: Optional[Any] = None) -> Dict[str, np.ndarray]:
+                backend: Optional[Any] = None,
+                target: str = "local") -> Dict[str, np.ndarray]:
         return self._ctx.execute(self, parallel=parallel, use_kernels=use_kernels,
-                                 backend=backend)
+                                 backend=backend, target=target)
 
 
 class GroupBy:
@@ -236,26 +237,22 @@ class Context:
         return Catalog(capacities={t: self.capacity(t) for t in self.tables})
 
     def compile(self, frame: Frame, parallel: Optional[int] = None,
-                use_kernels: bool = False, fuse: bool = True, backend: Any = None):
-        """frontend program → [Parallelize] → lower to vec → [fuse] → backend."""
-        from ..backends.local import LocalBackend
-        from ..core.passes import (
-            CommonSubexpressionElimination, DeadCodeElimination, FuseSelectAgg,
-            Parallelize,
-        )
-        from ..core.passes.lower_vec import LowerRelToVec
-        from ..core.passes.rewriter import PassManager
+                use_kernels: bool = False, fuse: bool = True, backend: Any = None,
+                target: str = "local", cache: Any = None):
+        """Compile through the unified driver — the single entry point for
+        every target's declarative lowering path (and the plan cache)."""
+        from ..compiler import compile as cvm_compile
 
-        program = frame.program()
-        passes = [CommonSubexpressionElimination(), DeadCodeElimination()]
-        if parallel and parallel > 1:
-            passes.append(Parallelize(n=parallel))
-        program = PassManager(passes).run(program)
-        program = LowerRelToVec(self.catalog()).apply(program)
-        if fuse:
-            program = PassManager([FuseSelectAgg(), DeadCodeElimination()]).run(program)
-        backend = backend or LocalBackend(use_kernels=use_kernels)
-        return backend.compile(program)
+        return cvm_compile(
+            frame.program(),
+            target=target,
+            parallel=parallel,
+            catalog=self.catalog(),
+            use_kernels=use_kernels,
+            fuse=fuse,
+            backend=backend,
+            cache=cache,
+        )
 
     def sources(self) -> Dict[str, Any]:
         from ..relational.runtime import VecTable
@@ -266,10 +263,15 @@ class Context:
         }
 
     def execute(self, frame: Frame, parallel: Optional[int] = None,
-                use_kernels: bool = False, backend: Any = None) -> Dict[str, np.ndarray]:
+                use_kernels: bool = False, backend: Any = None,
+                target: str = "local") -> Dict[str, np.ndarray]:
+        from ..compiler import get_target
+
         compiled = self.compile(frame, parallel=parallel, use_kernels=use_kernels,
-                                backend=backend)
-        (out,) = compiled(self.sources())
+                                backend=backend, target=target)
+        src = (self.tables if get_target(target).source_kind == "numpy"
+               else self.sources())
+        (out,) = compiled(src)
         return _to_numpy(out)
 
 

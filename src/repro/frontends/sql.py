@@ -242,6 +242,11 @@ def parse(sql: str, ctx: Context) -> Frame:
     return frame
 
 
-def query(ctx: Context, sql: str):
-    """Parse + execute through the standard pipeline."""
-    return parse(sql, ctx).collect()
+def query(ctx: Context, sql: str, target: str = "local",
+          parallel: Optional[int] = None):
+    """Parse + execute through the unified compilation driver.
+
+    ``target``/``parallel`` select the registered lowering path, so a SQL
+    query reaches every backend the Python frontend does.
+    """
+    return parse(sql, ctx).collect(target=target, parallel=parallel)

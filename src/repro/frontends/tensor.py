@@ -41,8 +41,14 @@ def pytree_type(tag: str) -> CollectionType:
     return CollectionType(PYTREE, TupleType(()), (("tag", tag),))
 
 
-def plan_train_program(model: Model, n_data: int) -> Program:
-    """Build the sequential step program and parallelize it over n_data."""
+def plan_train_program(model: Model, n_data: int,
+                       records: Optional[list] = None) -> Program:
+    """Build the sequential step program and parallelize it over n_data.
+
+    The planning rewrite runs through the compilation driver's instrumented
+    pass runner (``records`` collects per-pass timings like any other
+    driver-compiled program).
+    """
     from ..core.passes import Parallelize
 
     cfg = model.cfg
@@ -65,8 +71,10 @@ def plan_train_program(model: Model, n_data: int) -> Program:
     verify(program)
 
     # Alg. 1 → Alg. 2: split the batch, push the pipeline inside, pre-agg.
-    program = Parallelize(n=n_data, targets={batch.name}).apply(program)
-    verify(program)
+    from ..compiler.driver import run_passes
+
+    program = run_passes(program, [Parallelize(n=n_data, targets={batch.name})],
+                         stage="tensor-plan", records=records)
     return program
 
 

@@ -1,0 +1,29 @@
+"""Deterministic environments for jax-spawning subprocesses.
+
+Tests and benchmarks launch workers with a minimal env so XLA flags (device
+counts must be set before jax initializes) and stray user configuration
+can't leak in.  Centralised here because every spawn needs the same
+footgun-guard: containers that ship libtpu but have no TPU attached hang
+for minutes in TPU init unless the platform is pinned.
+"""
+
+from __future__ import annotations
+
+import os
+from pathlib import Path
+from typing import Iterable
+
+
+def subprocess_env(repo_root: Path, *, extra_pythonpath: Iterable[str] = (),
+                   **overrides: str) -> dict:
+    """Minimal env for a jax subprocess: repo sources + pinned platform."""
+    pythonpath = ":".join([str(Path(repo_root) / "src"),
+                           *map(str, extra_pythonpath)])
+    env = {
+        "PYTHONPATH": pythonpath,
+        "PATH": "/usr/bin:/bin",
+        "HOME": os.environ.get("HOME", "/root"),
+        "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+    }
+    env.update(overrides)
+    return env

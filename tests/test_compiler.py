@@ -1,0 +1,418 @@
+"""The unified compilation driver: targets, fingerprints, plan cache.
+
+Covers the driver subsystem's contracts:
+  * structural fingerprints are alpha-renaming-invariant but distinguish
+    params and nested programs;
+  * the same entry point compiles for every registered target and the
+    results agree (spmd runs in a subprocess so it can own 8 host devices);
+  * repeated compiles of the same frontend program hit the plan cache —
+    including ``ElasticExecutor`` re-planning the same worker count;
+  * per-pass instrumentation is recorded and rendered by ``explain()``;
+  * passes that fail to reach fixpoint warn instead of truncating silently.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.backends.multipod import ElasticExecutor
+from repro.launch.hermetic import subprocess_env
+from repro.compiler import (
+    PlanCache,
+    available_targets,
+    compile as cvm_compile,
+    fingerprint,
+    get_target,
+    program_size,
+)
+from repro.core import Builder, Program
+from repro.core.expr import AggSpec, col
+from repro.core.passes import FixpointWarning, ProgramRule
+from repro.core.passes.lower_vec import Catalog
+from repro.core.types import Atom, Bag, F32, TupleType
+from repro.frontends.dataflow import Context, count_, sum_
+
+ROOT = Path(__file__).resolve().parents[1]
+
+LINEITEM = TupleType.of(
+    l_quantity=F32, l_eprice=F32, l_disc=F32, l_shipdate=Atom("date"),
+)
+
+PRED = col("l_disc").between(0.05, 0.07) & (col("l_quantity") < 24.0)
+
+
+def q6_program(name="q6", pred=PRED, reg_prefix="r"):
+    b = Builder(name, prefix=reg_prefix)
+    li = b.input("lineitem", Bag(LINEITEM))
+    filtered = b.emit1("rel.Select", [li], {"pred": pred})
+    projected = b.emit1(
+        "rel.ExProj", [filtered],
+        {"exprs": (("x", col("l_eprice") * col("l_disc")),)})
+    result = b.emit1("rel.Aggr", [projected],
+                     {"aggs": (AggSpec("sum", col("x"), "revenue"),)})
+    return b.finish(result)
+
+
+@pytest.fixture()
+def sales_ctx():
+    rng = np.random.default_rng(7)
+    n = 2048
+    ctx = Context(pad_to=256)
+    ctx.register("sales", {
+        "region": rng.integers(0, 6, n).astype(np.int32),
+        "amount": rng.gamma(2.0, 50.0, n).astype(np.float32),
+        "year": rng.integers(2018, 2026, n).astype(np.int32),
+    })
+    return ctx
+
+
+def sales_query(ctx):
+    return (ctx.table("sales")
+            .filter(col("year") >= 2020)
+            .group_by("region", max_groups=8)
+            .agg(sum_("amount").as_("rev"), count_().as_("n")))
+
+
+# ---------------------------------------------------------------------------
+# fingerprints
+# ---------------------------------------------------------------------------
+
+
+class TestFingerprint:
+    def test_equal_across_rebuilds(self):
+        assert fingerprint(q6_program()) == fingerprint(q6_program())
+
+    def test_alpha_renaming_invariant(self):
+        p = q6_program()
+        assert fingerprint(p) == fingerprint(p.rename_all("_x"))
+        # entirely different register names from a different builder prefix
+        assert fingerprint(p) == fingerprint(q6_program(reg_prefix="zz"))
+
+    def test_program_name_irrelevant(self):
+        assert fingerprint(q6_program(name="a")) == fingerprint(q6_program(name="b"))
+
+    def test_params_distinguish(self):
+        other = q6_program(pred=col("l_disc").between(0.01, 0.02)
+                           & (col("l_quantity") < 24.0))
+        assert fingerprint(q6_program()) != fingerprint(other)
+
+    def test_param_order_canonical(self):
+        """The same instruction with params attached in a different order
+        fingerprints identically (params are a mapping, not a list)."""
+        p = q6_program()
+        swapped = p.with_body([
+            ins if not ins.params else ins.with_params(**dict(reversed(ins.params)))
+            for ins in p.body
+        ])
+        assert fingerprint(p) == fingerprint(swapped)
+
+    def test_nested_programs_distinguish(self, sales_ctx):
+        from repro.core.passes import Parallelize
+
+        base = sales_query(sales_ctx).program()
+        par2 = Parallelize(n=2).apply(base)
+        par4 = Parallelize(n=4).apply(base)
+        fps = {fingerprint(base), fingerprint(par2), fingerprint(par4)}
+        assert len(fps) == 3
+        # and parallelizing the same way twice agrees despite the global
+        # fresh-name counters used by the rewrite
+        assert fingerprint(Parallelize(n=2).apply(base)) == fingerprint(par2)
+
+    def test_input_types_distinguish(self):
+        wide = TupleType.of(l_quantity=F32, l_eprice=F32, l_disc=F32,
+                            l_shipdate=Atom("date"), extra=F32)
+        b = Builder("q6")
+        li = b.input("lineitem", Bag(wide))
+        filtered = b.emit1("rel.Select", [li], {"pred": PRED})
+        projected = b.emit1(
+            "rel.ExProj", [filtered],
+            {"exprs": (("x", col("l_eprice") * col("l_disc")),)})
+        result = b.emit1("rel.Aggr", [projected],
+                         {"aggs": (AggSpec("sum", col("x"), "revenue"),)})
+        assert fingerprint(q6_program()) != fingerprint(b.finish(result))
+
+
+# ---------------------------------------------------------------------------
+# target registry + driver
+# ---------------------------------------------------------------------------
+
+
+class TestTargets:
+    def test_builtin_targets_registered(self):
+        assert {"interp", "local", "spmd", "multipod"} <= set(available_targets())
+
+    def test_target_declares_lowering_path(self):
+        spmd = get_target("spmd")
+        names = [s.name for s in spmd.lowering_path]
+        assert names == ["canonicalize", "parallelize", "lower-rel-to-vec",
+                         "fuse", "lower-to-mesh"]
+        assert "mesh" in spmd.flavors
+
+    def test_unknown_target_raises(self):
+        with pytest.raises(KeyError, match="unknown compile target"):
+            get_target("gpu-cluster")
+
+    def test_non_dividing_parallel_fails_early(self, sales_ctx):
+        """A worker count that doesn't divide the padded capacity errors
+        with the table named, not a TypeError deep in the typing rules."""
+        with pytest.raises(ValueError, match="sales"):
+            sales_ctx.compile(sales_query(sales_ctx), parallel=3,
+                              cache=PlanCache())
+
+    def test_mesh_shortfall_fails_early(self, sales_ctx):
+        """A mesh-backed target without enough devices errors at the driver,
+        naming the shortfall, not inside jax mesh construction."""
+        import jax
+
+        need = jax.device_count() * 256
+        with pytest.raises(ValueError, match="device"):
+            cvm_compile(sales_query(sales_ctx).program(), target="spmd",
+                        parallel=need, catalog=Catalog(
+                            capacities={"sales": need * 4}), cache=False)
+
+    def test_reregistering_target_invalidates_cache(self, sales_ctx):
+        from repro.compiler import Target, register_target
+
+        local = get_target("local")
+        probe = Target(name="epoch-probe", flavors=local.flavors,
+                       lowering_path=local.lowering_path,
+                       make_backend=local.make_backend)
+        register_target(probe)
+        try:
+            cache = PlanCache()
+            q = sales_query(sales_ctx)
+            r1 = sales_ctx.compile(q, target="epoch-probe", cache=cache)
+            register_target(probe, overwrite=True)  # new lowering semantics
+            r2 = sales_ctx.compile(q, target="epoch-probe", cache=cache)
+            assert not r1.cache_hit
+            assert not r2.cache_hit  # stale plan from the old epoch not served
+        finally:
+            from repro.compiler.targets import _TARGETS
+            _TARGETS.pop("epoch-probe", None)
+
+
+class TestDriver:
+    def test_local_parallel_interp_agree(self, sales_ctx):
+        q = sales_query(sales_ctx)
+        seq = sales_ctx.execute(q, target="local")
+        par = sales_ctx.execute(q, parallel=4, target="local")
+        itp = sales_ctx.execute(q, target="interp")
+
+        base = np.argsort(np.asarray(seq["region"]).ravel())
+        for got in (par, itp):
+            o = np.argsort(np.asarray(got["region"]).ravel())
+            np.testing.assert_allclose(
+                np.asarray(got["rev"]).ravel()[o],
+                np.asarray(seq["rev"]).ravel()[base], rtol=1e-4)
+            np.testing.assert_array_equal(
+                np.asarray(got["n"]).ravel()[o],
+                np.asarray(seq["n"]).ravel()[base])
+
+    def test_explain_reports_instrumentation(self, sales_ctx):
+        res = sales_ctx.compile(sales_query(sales_ctx), parallel=2,
+                                cache=PlanCache())
+        stages = [r.stage for r in res.records]
+        assert "canonicalize" in stages
+        assert "parallelize" in stages
+        assert "lower-rel-to-vec" in stages
+        assert all(r.wall_s >= 0 for r in res.records)
+        text = res.explain()
+        assert "parallelize" in text and "lower-rel-to-vec" in text
+        assert res.fingerprint[:12] in text
+        recs = res.explain_records()
+        assert recs[-1]["stage"] == "backend"
+        assert json.dumps(recs)  # JSON-serialisable for benchmarks
+
+    def test_final_program_changed_flavor(self, sales_ctx):
+        res = sales_ctx.compile(sales_query(sales_ctx), parallel=4,
+                                cache=PlanCache())
+        assert any(op.startswith("vec.") for op in res.program.opcodes())
+        assert any(op.startswith("cf.") for op in res.program.opcodes())
+        assert all(op != "rel.Scan" for op in res.program.opcodes())
+
+    def test_ir_size_stays_bounded(self, sales_ctx):
+        """Regression for the Parallelize fixpoint explosion: the grouped
+        aggregation used to ping-pong with its own recombiner for 200
+        iterations, growing the plan to ~400 instructions."""
+        res = sales_ctx.compile(sales_query(sales_ctx), parallel=4,
+                                cache=PlanCache())
+        assert program_size(res.program) < 30
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+
+class TestPlanCache:
+    def test_repeated_frame_compile_hits_cache(self, sales_ctx):
+        q = sales_query(sales_ctx)
+        cache = PlanCache()
+        r1 = sales_ctx.compile(q, parallel=2, cache=cache)
+        r2 = sales_ctx.compile(q, parallel=2, cache=cache)
+        assert not r1.cache_hit
+        assert r2.cache_hit
+        assert r2.executable is r1.executable  # the jitted plan is reused
+        assert cache.stats == {"hits": 1, "misses": 1, "entries": 1}
+
+    def test_option_changes_miss(self, sales_ctx):
+        q = sales_query(sales_ctx)
+        cache = PlanCache()
+        sales_ctx.compile(q, parallel=2, cache=cache)
+        r2 = sales_ctx.compile(q, parallel=4, cache=cache)
+        r3 = sales_ctx.compile(q, parallel=2, fuse=False, cache=cache)
+        assert not r2.cache_hit and not r3.cache_hit
+        assert cache.stats["entries"] == 3
+
+    def test_program_changes_miss(self, sales_ctx):
+        cache = PlanCache()
+        q = sales_query(sales_ctx)
+        sales_ctx.compile(q, cache=cache)
+        r2 = sales_ctx.compile(q.filter(col("region") > 2), cache=cache)
+        assert not r2.cache_hit
+
+    def test_cache_disabled(self, sales_ctx):
+        q = sales_query(sales_ctx)
+        r1 = sales_ctx.compile(q, cache=False)
+        r2 = sales_ctx.compile(q, cache=False)
+        assert not r1.cache_hit and not r2.cache_hit
+
+    def test_elastic_executor_replan_hits_cache(self, sales_ctx):
+        q = sales_query(sales_ctx)
+        cache = PlanCache()
+        ex = ElasticExecutor(
+            program_builder=lambda: q.program("elastic_q"),
+            catalog=sales_ctx.catalog(),
+            cache=cache,
+        )
+        r1 = ex.plan(1)
+        r2 = ex.plan(1)  # elastic event back to a seen topology: cached
+        assert not r1.cache_hit
+        assert r2.cache_hit
+        assert r2.executable is r1.executable
+        (out,) = ex.run(sales_ctx.sources())
+        got = out.to_numpy()
+        want = sales_ctx.execute(q, target="interp")
+        o1 = np.argsort(got["region"])
+        o2 = np.argsort(np.asarray(want["region"]).ravel())
+        np.testing.assert_allclose(got["rev"][o1],
+                                   np.asarray(want["rev"]).ravel()[o2],
+                                   rtol=1e-4)
+
+    def test_lru_eviction(self, sales_ctx):
+        q = sales_query(sales_ctx)
+        cache = PlanCache(capacity=2)
+        sales_ctx.compile(q, parallel=None, cache=cache)
+        sales_ctx.compile(q, parallel=2, cache=cache)
+        sales_ctx.compile(q, parallel=4, cache=cache)
+        assert len(cache) == 2
+        r = sales_ctx.compile(q, parallel=None, cache=cache)  # evicted → miss
+        assert not r.cache_hit
+
+
+# ---------------------------------------------------------------------------
+# fixpoint diagnostics
+# ---------------------------------------------------------------------------
+
+
+class TestFixpointWarning:
+    def test_nonconverging_pass_warns(self):
+        class Spin(ProgramRule):
+            name = "spin"
+            recurse = False
+
+            def run(self, program):
+                return program.with_name(program.name + "x")
+
+        with pytest.warns(FixpointWarning, match="spin"):
+            Spin().apply(q6_program(), max_iters=5)
+
+    def test_converging_pass_does_not_warn(self, recwarn):
+        from repro.core.passes import DeadCodeElimination
+
+        DeadCodeElimination().apply(q6_program())
+        assert not [w for w in recwarn.list
+                    if issubclass(w.category, FixpointWarning)]
+
+
+# ---------------------------------------------------------------------------
+# one entry point, every backend (spmd needs its own device fleet)
+# ---------------------------------------------------------------------------
+
+SPMD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+
+    from repro.compiler import PLAN_CACHE, compile as cvm_compile
+    from repro.core.expr import col
+    from repro.frontends.dataflow import Context, count_, sum_
+
+    rng = np.random.default_rng(7)
+    n = 2048
+    ctx = Context(pad_to=256)
+    ctx.register("sales", {
+        "region": rng.integers(0, 6, n).astype(np.int32),
+        "amount": rng.gamma(2.0, 50.0, n).astype(np.float32),
+        "year": rng.integers(2018, 2026, n).astype(np.int32),
+    })
+    q = (ctx.table("sales").filter(col("year") >= 2020)
+         .group_by("region", max_groups=8)
+         .agg(sum_("amount").as_("rev"), count_().as_("n")))
+
+    results = {}
+    for target, parallel in [("local", None), ("spmd", 2), ("interp", None)]:
+        got = ctx.execute(q, target=target, parallel=parallel)
+        o = np.argsort(np.asarray(got["region"]).ravel())
+        results[target] = {
+            "region": np.asarray(got["region"]).ravel()[o].tolist(),
+            "rev": np.asarray(got["rev"]).ravel()[o].tolist(),
+            "n": np.asarray(got["n"]).ravel()[o].tolist(),
+        }
+    spmd_res = cvm_compile(q.program(), target="spmd", parallel=2,
+                           catalog=ctx.catalog())
+    results["spmd_ops"] = [op for op in spmd_res.program.opcodes()
+                           if op.startswith("mesh.")]
+    # scalar aggregation: the pre-aggregation must become a collective
+    scalar = ctx.table("sales").filter(col("year") >= 2020).agg(
+        sum_("amount").as_("rev"))
+    scalar_res = cvm_compile(scalar.program(), target="spmd", parallel=2,
+                             catalog=ctx.catalog())
+    results["spmd_scalar_ops"] = [op for op in scalar_res.program.opcodes()
+                                  if op.startswith("mesh.")]
+    results["cache"] = PLAN_CACHE.stats
+    print("RESULTS" + json.dumps(results))
+""")
+
+
+@pytest.fixture(scope="module")
+def multi_target_results():
+    proc = subprocess.run(
+        [sys.executable, "-c", SPMD_SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        env=subprocess_env(ROOT),
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULTS")][0]
+    return json.loads(line[len("RESULTS"):])
+
+
+def test_one_entry_point_all_targets_identical(multi_target_results):
+    r = multi_target_results
+    for target in ("spmd", "interp"):
+        np.testing.assert_array_equal(r[target]["region"], r["local"]["region"])
+        np.testing.assert_allclose(r[target]["rev"], r["local"]["rev"],
+                                   rtol=1e-4)
+        np.testing.assert_array_equal(r[target]["n"], r["local"]["n"])
+
+
+def test_spmd_path_lowered_to_mesh_flavor(multi_target_results):
+    assert "mesh.MeshExecute" in multi_target_results["spmd_ops"]
+    # the scalar pre-aggregation became a collective inside the mesh body
+    assert "mesh.AllReduce" in multi_target_results["spmd_scalar_ops"]

@@ -13,6 +13,8 @@ from pathlib import Path
 
 import pytest
 
+from repro.launch.hermetic import subprocess_env
+
 ROOT = Path(__file__).resolve().parents[1]
 
 SCRIPT = textwrap.dedent("""
@@ -60,8 +62,7 @@ def spmd_results():
     proc = subprocess.run(
         [sys.executable, "-c", SCRIPT],
         capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+        env=subprocess_env(ROOT),
     )
     assert proc.returncode == 0, proc.stderr[-4000:]
     line = [l for l in proc.stdout.splitlines() if l.startswith("RESULTS")][0]

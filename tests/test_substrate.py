@@ -56,8 +56,9 @@ class TestCheckpoint:
         mgr = CheckpointManager(tmp_path, n_shards=4)
         big = jnp.arange(64 * 8, dtype=jnp.float32).reshape(64, 8)
         mgr.save(1, {"w": big})
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((1,), ("data",))
         target = jax.device_put(jnp.zeros((64, 8)), NamedSharding(mesh, P("data")))
         out, _ = mgr.restore({"w": target})
         np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(big))

@@ -99,14 +99,14 @@ class TestCvmPlansTheTrainer:
     def test_lowered_plan_trains(self):
         from repro.configs import get_reduced
         from repro.frontends.tensor import lower_to_pjit, plan_train_program
+        from repro.launch.mesh import make_mesh
         from repro.models.api import build_model
         from repro.train.optimizer import AdamW
 
         cfg = get_reduced("qwen2-1.5b")
         model = build_model(cfg)
         plan = plan_train_program(model, n_data=1)
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((1, 1), ("data", "model"))
         rng = np.random.default_rng(0)
         b, s = 4, 32
         batch = {

@@ -13,8 +13,13 @@ Also reports the compilation driver's per-pass instrumentation
 in-process target, including the plan-cache effect of a repeated compile.
 
 Results → artifacts/perf_steps/<cell>__<step>.json,
-artifacts/perf_steps/compile_passes__<target>.json, and markdown tables on
-stdout.  Usage: PYTHONPATH=src:. python benchmarks/perf_steps.py
+artifacts/perf_steps/compile_passes__<target>.json (pass records + the
+cost-model decision records when the costed search ran), and markdown
+tables on stdout.
+
+Usage: PYTHONPATH=src:. python benchmarks/perf_steps.py [--compile-only]
+(--compile-only runs just the compile-pass/cost report — the artifact CI
+uploads per PR.)
 """
 
 import json
@@ -99,16 +104,22 @@ def compile_pass_report():
 
     cache = PlanCache()
     for target in ("interp", "local"):
+        # optimize="cost": the driver's costed strategy search runs (and is
+        # reported) wherever the target declares Choice points
         res = cvm_compile(program, target=target, parallel=4,
-                          catalog=ctx.catalog(), cache=cache)
+                          catalog=ctx.catalog(), cache=cache, optimize="cost")
+        payload = {"records": res.explain_records(),
+                   "strategy": dict(res.strategy),
+                   "decision": (res.decision.records()
+                                if res.decision is not None else None)}
         (OUT / f"compile_passes__{target}.json").write_text(
-            json.dumps(res.explain_records(), indent=2))
+            json.dumps(payload, indent=2))
         print(res.explain())
         print()
 
     t0 = time.perf_counter()
     res = cvm_compile(program, target="local", parallel=4,
-                      catalog=ctx.catalog(), cache=cache)
+                      catalog=ctx.catalog(), cache=cache, optimize="cost")
     lookup_ms = (time.perf_counter() - t0) * 1e3
     print(f"[perf] repeated compile: cache_hit={res.cache_hit} "
           f"lookup={lookup_ms:.3f} ms (first compile {res.total_s * 1e3:.2f} ms)")
@@ -117,6 +128,8 @@ def compile_pass_report():
 def main():
     OUT.mkdir(parents=True, exist_ok=True)
     compile_pass_report()
+    if "--compile-only" in sys.argv:
+        return
     for arch, shape in CELLS:
         for step, env_over in STEPS.items():
             out = OUT / f"{arch}__{shape}__{step}.json"

@@ -33,6 +33,8 @@ class ElasticExecutor:
     use_kernels: bool = False
     workers: int = 1
     cache: Optional[Any] = None   # PlanCache override; None → driver default
+    optimize: Optional[str] = None  # "cost" → costed strategy search per plan
+    store: Any = None             # PlanStore/path: re-plans survive restarts
     # hot-path memo so steady-state run() skips the rebuild+fingerprint of a
     # driver-cache lookup; the driver cache still provides cross-topology and
     # cross-executor reuse
@@ -56,6 +58,8 @@ class ElasticExecutor:
             axis=self.axis,
             use_kernels=self.use_kernels,
             cache=self.cache,
+            optimize=self.optimize,
+            store=self.store,
         )
 
     def run(self, sources, *args):

@@ -1,15 +1,28 @@
 """The CVM compilation driver subsystem.
 
-Three pieces (see docs/compiler.md):
+Six pieces (see docs/compiler.md):
 
 * :mod:`repro.compiler.targets` — the backend target registry with
-  declarative, flavor-aware lowering paths;
+  declarative, flavor-aware lowering paths and strategy ``Choice`` points;
 * :mod:`repro.compiler.driver` — the single ``compile()`` entry point with
-  per-pass instrumentation and the structural plan cache;
+  per-pass instrumentation, the structural plan cache, and the
+  ``optimize="cost"`` candidate search;
 * :mod:`repro.compiler.fingerprint` — alpha-renaming-invariant structural
-  fingerprints of ``Program`` trees (the cache's content address).
+  fingerprints of ``Program`` trees (the cache's content address);
+* :mod:`repro.compiler.stats` — the table-statistics catalog and the
+  estimate propagation rules;
+* :mod:`repro.compiler.cost` — the cost model, calibration, and plan
+  decisions;
+* :mod:`repro.compiler.store` — the on-disk plan-metadata store.
 """
 
+from .cost import (  # noqa: F401
+    Candidate,
+    CostCalibration,
+    CostModel,
+    PlanDecision,
+    estimate_cost,
+)
 from .driver import (  # noqa: F401
     PLAN_CACHE,
     CompileResult,
@@ -20,7 +33,10 @@ from .driver import (  # noqa: F401
     run_passes,
 )
 from .fingerprint import canonicalize, fingerprint, fingerprint_value  # noqa: F401
+from .stats import RegStats, Statistics, TableStats, propagate, stats_from_columns  # noqa: F401
+from .store import PlanStore, default_store  # noqa: F401
 from .targets import (  # noqa: F401
+    Choice,
     CompileOptions,
     Stage,
     Target,

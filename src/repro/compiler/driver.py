@@ -15,6 +15,7 @@ they are instrumented the same way.
 
 from __future__ import annotations
 
+import itertools
 import time
 import warnings
 from collections import OrderedDict
@@ -23,8 +24,9 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from ..core.program import Program
 from ..core.verify import verify
-from .fingerprint import fingerprint
-from .targets import CompileOptions, get_target, target_epoch
+from .cost import CALIBRATION, Candidate, PlanDecision, estimate_cost
+from .fingerprint import fingerprint, fingerprint_value
+from .targets import Choice, CompileOptions, get_target, target_epoch
 
 __all__ = [
     "compile", "run_passes", "program_size",
@@ -102,6 +104,10 @@ class CompileResult:
     fingerprint: str
     backend_s: float = 0.0
     cache_hit: bool = False
+    #: (choice-name, variant) pairs the lowering actually used
+    strategy: Tuple[Tuple[str, str], ...] = ()
+    #: costed-search provenance (None for fixed-path compiles)
+    decision: Optional[PlanDecision] = None
 
     def __call__(self, sources: Any = None, *args: Any) -> Any:
         return self.executable(sources, *args)
@@ -111,11 +117,14 @@ class CompileResult:
         return self.backend_s + sum(r.wall_s for r in self.records)
 
     def explain(self) -> str:
-        """Per-pass wall time and IR-size deltas as a markdown table."""
+        """Per-pass wall time, IR-size deltas, and the plan decision."""
         head = (f"compile[{self.target}] {self.source.name}: "
                 + ("cache hit" if self.cache_hit
                    else f"{self.total_s * 1e3:.2f} ms")
                 + f" (fingerprint {self.fingerprint[:12]})")
+        if self.strategy:
+            head += (" strategy "
+                     + ", ".join(f"{k}={v}" for k, v in self.strategy))
         lines = [head,
                  "| stage | pass | wall ms | IR size | Δ |",
                  "|---|---|---:|---:|---:|"]
@@ -124,6 +133,8 @@ class CompileResult:
                          f"| {r.size_after} | {r.delta:+d} |")
         lines.append(f"| backend | {self.target} | {self.backend_s * 1e3:.3f} "
                      f"| {program_size(self.program)} | +0 |")
+        if self.decision is not None:
+            lines.append(self.decision.render())
         return "\n".join(lines)
 
     def explain_records(self) -> List[Dict[str, Any]]:
@@ -193,6 +204,75 @@ PLAN_CACHE = PlanCache()
 # ---------------------------------------------------------------------------
 
 
+def _lower_with_strategy(program: Program, tgt: Any, opts: CompileOptions,
+                         chosen: Dict[str, str], check: bool,
+                         ) -> Tuple[Program, List[PassRecord]]:
+    """Run the target's lowering path with each Choice bound to a variant."""
+    records: List[PassRecord] = []
+    lowered = program
+    for stage in tgt.lowering_path:
+        if isinstance(stage, Choice):
+            stage = stage.variant(chosen.get(stage.name, stage.default))
+        lowered = run_passes(lowered, stage.build(opts), stage=stage.name,
+                             records=records, check=check)
+    return lowered, records
+
+
+def _choose_strategy(program: Program, tgt: Any, opts: CompileOptions,
+                     check: bool, stored: Optional[Dict[str, Any]],
+                     ) -> Tuple[Dict[str, str], Program, List[PassRecord],
+                                Optional[PlanDecision]]:
+    """Cost-based plan selection: enumerate the target's Choice points,
+    lower each candidate, cost the final programs, keep the cheapest.
+
+    A plan-store record from a previous process short-circuits the search:
+    the recorded winner is re-lowered directly (source="store").
+    """
+    choices = tgt.choices()
+    forced = dict(opts.strategy or ())
+    stats = opts.stats()
+
+    if stored is not None and stored.get("strategy"):
+        chosen = {str(k): str(v) for k, v in stored["strategy"]}
+        chosen.update(forced)
+        t0 = time.perf_counter()
+        lowered, records = _lower_with_strategy(program, tgt, opts, chosen,
+                                                check)
+        lower_s = time.perf_counter() - t0
+        cand = Candidate(strategy=tuple(sorted(chosen.items())),
+                         est_cost=estimate_cost(lowered, stats),
+                         size=program_size(lowered), lower_s=lower_s)
+        decision = PlanDecision(candidates=(cand,), chosen=0, source="store",
+                                est_seconds=CALIBRATION.seconds(cand.est_cost))
+        return chosen, lowered, records, decision
+
+    axes = []
+    for c in choices:
+        labels = (forced[c.name],) if c.name in forced else c.labels(opts)
+        axes.append([(c.name, label) for label in labels])
+
+    candidates: List[Candidate] = []
+    lowerings: List[Tuple[Program, List[PassRecord]]] = []
+    for combo in itertools.product(*axes) if axes else [()]:
+        chosen = dict(combo)
+        t0 = time.perf_counter()
+        lowered, records = _lower_with_strategy(program, tgt, opts, chosen,
+                                                check)
+        lower_s = time.perf_counter() - t0
+        candidates.append(Candidate(
+            strategy=tuple(sorted(chosen.items())),
+            est_cost=estimate_cost(lowered, stats),
+            size=program_size(lowered), lower_s=lower_s))
+        lowerings.append((lowered, records))
+
+    best = min(range(len(candidates)), key=lambda i: candidates[i].est_cost)
+    decision = PlanDecision(
+        candidates=tuple(candidates), chosen=best, source="search",
+        est_seconds=CALIBRATION.seconds(candidates[best].est_cost))
+    lowered, records = lowerings[best]
+    return dict(candidates[best].strategy), lowered, records, decision
+
+
 def compile(program: Program, target: str = "local", *,
             parallel: Optional[int] = None,
             catalog: Any = None,
@@ -203,7 +283,10 @@ def compile(program: Program, target: str = "local", *,
             jit: bool = True,
             collectives: bool = True,
             parallelize_targets: Optional[Sequence[str]] = None,
+            optimize: Optional[str] = None,
+            strategy: Any = None,
             cache: Union[None, bool, PlanCache] = None,
+            store: Any = None,
             backend: Any = None,
             check: bool = True) -> CompileResult:
     """Compile a frontend CVM program for a registered target.
@@ -212,13 +295,25 @@ def compile(program: Program, target: str = "local", *,
     ``False`` → no caching; a :class:`PlanCache` → that cache.  An explicit
     ``backend`` instance overrides the target's factory and bypasses the
     cache (its configuration is invisible to the key).
+
+    ``optimize="cost"`` turns the fixed lowering path into a costed search
+    over the target's declared strategy :class:`~repro.compiler.targets.Choice`
+    points; ``strategy={"grouped-recombine": "exchange", ...}`` forces
+    specific variants.  ``store`` (a :class:`~repro.compiler.store.PlanStore`
+    or path) persists plan metadata across processes; ``None`` falls back to
+    the ``REPRO_PLAN_STORE`` environment default, ``False`` disables.
     """
+    if optimize not in (None, "cost"):
+        raise ValueError(f"unknown optimize mode {optimize!r}; "
+                         "expected None or 'cost'")
     tgt = get_target(target)
+    strat = _normalize_strategy(strategy, tgt)
     opts = CompileOptions(
         parallel=parallel, use_kernels=use_kernels, fuse=fuse, axis=axis,
         jit=jit, collectives=collectives, catalog=catalog, mesh=mesh,
         parallelize_targets=(tuple(sorted(parallelize_targets))
                              if parallelize_targets else None),
+        optimize=optimize, strategy=strat,
     )
     _check_parallel_divides(program, opts)
     _check_mesh_available(tgt, opts)
@@ -232,18 +327,30 @@ def compile(program: Program, target: str = "local", *,
         plan_cache = cache
     use_cache = plan_cache is not None and backend is None
 
-    key: Optional[Tuple] = None
+    key = (tgt.name, target_epoch(tgt.name), fp, opts.cache_key())
     if use_cache:
-        key = (tgt.name, target_epoch(tgt.name), fp, opts.cache_key())
         hit = plan_cache.lookup(key)
         if hit is not None:
             return replace(hit, cache_hit=True)
 
-    records: List[PassRecord] = []
-    lowered = program
-    for stage in tgt.lowering_path:
-        lowered = run_passes(lowered, stage.build(opts), stage=stage.name,
-                             records=records, check=check)
+    plan_store = _resolve_store(store)
+    store_key: Optional[str] = None
+    if plan_store is not None:
+        store_key = fingerprint_value(key)
+        _seed_calibration(plan_store)
+
+    decision: Optional[PlanDecision] = None
+    if optimize == "cost" and tgt.choices():
+        stored = (plan_store.load_plan(store_key)
+                  if plan_store is not None else None)
+        chosen, lowered, records, decision = _choose_strategy(
+            program, tgt, opts, check, stored)
+    else:
+        chosen = dict(opts.strategy or ())
+        for c in tgt.choices():
+            chosen.setdefault(c.name, c.default)
+        lowered, records = _lower_with_strategy(program, tgt, opts, chosen,
+                                                check)
 
     _check_flavors(lowered, tgt)
 
@@ -251,6 +358,11 @@ def compile(program: Program, target: str = "local", *,
     t0 = time.perf_counter()
     executable = be.compile(lowered)
     backend_s = time.perf_counter() - t0
+
+    if decision is not None:
+        measured = backend_s + sum(r.wall_s for r in records)
+        CALIBRATION.update(decision.winner.est_cost, measured)
+        decision = replace(decision, measured_s=measured)
 
     result = CompileResult(
         target=tgt.name,
@@ -260,10 +372,82 @@ def compile(program: Program, target: str = "local", *,
         records=tuple(records),
         fingerprint=fp,
         backend_s=backend_s,
+        strategy=tuple(sorted(chosen.items())),
+        decision=decision,
     )
-    if use_cache and key is not None:
+    if use_cache:
         plan_cache.store(key, result)
+    if plan_store is not None and store_key is not None and backend is None:
+        plan_store.save_plan(store_key, {
+            "target": tgt.name,
+            "fingerprint": fp,
+            "strategy": sorted(chosen.items()),
+            "optimize": optimize,
+            "records": result.explain_records(),
+            "decision": decision.records() if decision is not None else None,
+            "backend_s": backend_s,
+        })
+        # only persist calibration this compile actually updated — a plain
+        # fixed-path compile must not clobber another process's learned scale
+        if decision is not None and CALIBRATION.n:
+            plan_store.save_calibration(CALIBRATION)
     return result
+
+
+def _normalize_strategy(strategy: Any, tgt: Any,
+                        ) -> Optional[Tuple[Tuple[str, str], ...]]:
+    """Validate forced strategy overrides against the target's choices —
+    a misspelled choice or variant must fail loudly, not silently compile
+    the default plan under a polluted cache key."""
+    if not strategy:
+        return None
+    try:
+        pairs = sorted(strategy.items() if isinstance(strategy, dict)
+                       else strategy)
+        strat = tuple((str(k), str(v)) for k, v in pairs)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"strategy must be a mapping or (choice, variant) pairs, "
+            f"got {strategy!r}") from None
+    known = {c.name: [label for label, _ in c.variants] for c in tgt.choices()}
+    for name, label in strat:
+        if name not in known:
+            raise ValueError(
+                f"target {tgt.name!r} declares no strategy choice {name!r}; "
+                f"declared: {sorted(known) or 'none'}")
+        if label not in known[name]:
+            raise ValueError(
+                f"choice {name!r} has no variant {label!r}; "
+                f"known: {known[name]}")
+    return strat
+
+
+def _resolve_store(store: Any):
+    """``False`` → off; ``None`` → env default; path/str → open; else as-is."""
+    if store is False:
+        return None
+    from .store import PlanStore, default_store
+
+    if store is None:
+        return default_store()
+    if isinstance(store, (str, bytes)) or hasattr(store, "__fspath__"):
+        return PlanStore(store)
+    return store
+
+
+_CALIBRATION_SEEDED = False
+
+
+def _seed_calibration(plan_store: Any) -> None:
+    """Warm the in-process calibration from the store, once."""
+    global _CALIBRATION_SEEDED
+    if _CALIBRATION_SEEDED or CALIBRATION.n:
+        return
+    loaded = plan_store.load_calibration()
+    if loaded.n:
+        CALIBRATION.scale = loaded.scale
+        CALIBRATION.n = loaded.n
+    _CALIBRATION_SEEDED = True
 
 
 def _check_parallel_divides(program: Program, opts: CompileOptions) -> None:

@@ -1,0 +1,295 @@
+"""Statistics catalog + estimate propagation for cost-based plan selection.
+
+The paper's rewriting pipelines are "highly flexible and configurable"; to
+*choose* between two valid physical plans (Tupleware/Flare-style) the driver
+needs cardinality estimates.  This module carries them:
+
+  * :class:`TableStats` / :class:`Statistics` — the per-table catalog:
+    row count, bytes per row, and per-column NDV (number of distinct
+    values, i.e. key cardinality).  Frontends thread these into
+    ``CompileOptions`` via ``Catalog.stats``.
+  * :class:`RegStats` — the estimate attached to one register while
+    propagating through a (possibly already rewritten) program.
+  * :func:`propagate` — abstract interpretation of a CVM program under the
+    catalog: every pass output stays estimable because the rules understand
+    the rewritten forms too (``cf.Split``/``ConcurrentExecute`` chunks,
+    ``mesh.MeshExecute`` bodies, fused ``vec.FusedSelectAgg``, collectives).
+    Unknown instructions pass their first input's estimate through — the
+    same "leave it as is" contract the rewrite rules follow.
+
+Estimates are deliberately coarse (constant filter selectivity, independent
+keys); they only need to rank alternative physical plans, not predict
+runtimes.  Calibration against measured compiles lives in ``cost.py``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+from ..core.program import Program, Register
+from ..core.types import CollectionType, item_nbytes, is_coll
+
+__all__ = [
+    "TableStats", "Statistics", "RegStats", "propagate", "stats_from_columns",
+    "DEFAULT_SELECTIVITY",
+]
+
+#: fraction of rows assumed to survive a filter when the predicate is opaque
+DEFAULT_SELECTIVITY = 0.5
+
+
+# ---------------------------------------------------------------------------
+# the catalog
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TableStats:
+    """Statistics for one base table."""
+
+    rows: int
+    bytes_per_row: float = 8.0
+    ndv: Tuple[Tuple[str, int], ...] = ()  # per-column distinct-value counts
+
+    def ndv_of(self, column: str, default: Optional[int] = None) -> Optional[int]:
+        for name, n in self.ndv:
+            if name == column:
+                return n
+        return default
+
+    @staticmethod
+    def make(rows: int, bytes_per_row: float = 8.0,
+             ndv: Optional[Mapping[str, int]] = None) -> "TableStats":
+        return TableStats(int(rows), float(bytes_per_row),
+                          tuple(sorted((ndv or {}).items())))
+
+
+@dataclass(frozen=True)
+class Statistics:
+    """Per-table statistics catalog (hashable: part of the plan-cache key)."""
+
+    tables: Tuple[Tuple[str, TableStats], ...] = ()
+
+    @staticmethod
+    def make(tables: Mapping[str, TableStats]) -> "Statistics":
+        return Statistics(tuple(sorted(tables.items())))
+
+    def table(self, name: str) -> Optional[TableStats]:
+        for n, t in self.tables:
+            if n == name:
+                return t
+        return None
+
+    def cache_key(self) -> Tuple:
+        return tuple((n, t.rows, t.bytes_per_row, t.ndv) for n, t in self.tables)
+
+
+def stats_from_columns(columns: Mapping[str, Any]) -> TableStats:
+    """Exact statistics from in-memory numpy columns (small-data frontends)."""
+    import numpy as np
+
+    rows = len(next(iter(columns.values()))) if columns else 0
+    bpr = float(sum(np.asarray(v).dtype.itemsize for v in columns.values())) or 8.0
+    ndv = {k: int(np.unique(np.asarray(v)).size) for k, v in columns.items()}
+    return TableStats.make(rows, bpr, ndv)
+
+
+# ---------------------------------------------------------------------------
+# register estimates
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RegStats:
+    """Estimated properties of one register's value.
+
+    For split registers (``Seq[n]`` of chunks) the estimate is *per chunk*,
+    matching how the backends execute them.
+    """
+
+    rows: float
+    bytes_per_row: float = 8.0
+    ndv: Tuple[Tuple[str, float], ...] = ()
+
+    @property
+    def bytes(self) -> float:
+        return self.rows * self.bytes_per_row
+
+    def ndv_of(self, column: str, default: Optional[float] = None) -> Optional[float]:
+        for name, n in self.ndv:
+            if name == column:
+                return n
+        return default
+
+    def scaled(self, factor: float) -> "RegStats":
+        rows = max(self.rows * factor, 1.0)
+        ndv = tuple((k, min(v, rows)) for k, v in self.ndv)
+        return replace(self, rows=rows, ndv=ndv)
+
+    def group_rows(self, keys: Tuple[str, ...], cap: Optional[int] = None) -> float:
+        """Estimated distinct groups for ``keys`` (independence assumption)."""
+        est = 1.0
+        for k in keys:
+            est *= self.ndv_of(k) or min(self.rows, 64.0)
+        est = min(est, self.rows)
+        if cap is not None:
+            est = min(est, float(cap))
+        return max(est, 1.0)
+
+
+def _bpr_of(reg: Register, default: float = 8.0) -> float:
+    t = reg.type
+    while is_coll(t) and isinstance(t, CollectionType) and is_coll(t.item):
+        t = t.item  # unwrap Seq-of-chunks down to the element collection
+    return float(item_nbytes(t, int(default)))
+
+
+def _seq_n(reg: Register) -> int:
+    t = reg.type
+    if is_coll(t):
+        n = t.attr("n")
+        if n:
+            return int(n)
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# propagation
+# ---------------------------------------------------------------------------
+
+
+class StatsEnv:
+    """Register → RegStats over a program tree (nested scopes included)."""
+
+    def __init__(self) -> None:
+        self._env: Dict[Tuple[int, str], RegStats] = {}
+
+    def get(self, program: Program, reg: Register) -> RegStats:
+        got = self._env.get((id(program), reg.name))
+        if got is not None:
+            return got
+        # total fallback: estimate from the type alone
+        cap = reg.type.attr("max_count") if is_coll(reg.type) else None
+        return RegStats(rows=float(cap or 64), bytes_per_row=_bpr_of(reg))
+
+    def set(self, program: Program, reg: Register, s: RegStats) -> None:
+        self._env[(id(program), reg.name)] = s
+
+
+def propagate(program: Program, stats: Optional[Statistics] = None,
+              input_stats: Optional[Mapping[str, RegStats]] = None,
+              env: Optional[StatsEnv] = None) -> StatsEnv:
+    """Propagate table statistics through a program (and nested programs).
+
+    Works on any IR flavor mix, before or after rewriting: the rules cover
+    the relational ops, their vec/mesh lowerings, and the control-flow
+    scaffolding the parallelization rewrite introduces, so estimates
+    "survive" ``Parallelize``, ``FuseSelectAgg``, and ``LowerToMesh``.
+    """
+    env = env or StatsEnv()
+    for r in program.inputs:
+        if input_stats and r.name in input_stats:
+            env.set(program, r, input_stats[r.name])
+    for ins in program.body:
+        args = [env.get(program, r) for r in ins.inputs]
+        outs = _propagate_ins(ins, args, stats, env, program)
+        for reg, s in zip(ins.outputs, outs):
+            env.set(program, reg, s)
+    return env
+
+
+def _scan_stats(table: str, reg: Register, stats: Optional[Statistics]) -> RegStats:
+    ts = stats.table(table) if stats is not None else None
+    if ts is None:
+        cap = reg.type.attr("max_count") if is_coll(reg.type) else None
+        return RegStats(rows=float(cap or 1024), bytes_per_row=_bpr_of(reg))
+    return RegStats(rows=float(ts.rows), bytes_per_row=float(ts.bytes_per_row),
+                    ndv=tuple((k, float(v)) for k, v in ts.ndv))
+
+
+def _propagate_ins(ins, args, stats, env: StatsEnv, program: Program):
+    op = ins.opcode
+    first = args[0] if args else RegStats(rows=1.0)
+
+    if op in ("rel.Scan", "vec.ScanVec"):
+        return [_scan_stats(ins.param("table"), ins.outputs[0], stats)]
+
+    if op in ("rel.Select", "vec.MaskSelect"):
+        return [first.scaled(DEFAULT_SELECTIVITY)]
+
+    if op in ("rel.Proj", "rel.ExProj", "vec.ProjVec", "vec.ExProjVec",
+              "vec.SortByKey", "rel.OrderBy", "vec.Compact"):
+        return [replace(first.scaled(1.0), bytes_per_row=_bpr_of(ins.outputs[0]))]
+
+    if op in ("rel.Aggr", "vec.AggrVec", "vec.FusedSelectAgg",
+              "vec.FinalizeSingle", "rel.CombinePartials"):
+        return [RegStats(rows=1.0, bytes_per_row=_bpr_of(ins.outputs[0]))]
+
+    if op in ("rel.GroupByAggr", "vec.GroupAggSorted"):
+        keys = tuple(ins.param("keys") or ())
+        cap = ins.param("max_groups")
+        groups = first.group_rows(keys, int(cap) if cap else None)
+        ndv = tuple((k, min(first.ndv_of(k) or groups, groups)) for k in keys)
+        return [RegStats(rows=groups, bytes_per_row=_bpr_of(ins.outputs[0]),
+                         ndv=ndv)]
+
+    if op in ("rel.Join", "vec.MergeJoinSorted"):
+        left = args[0]
+        out = replace(left.scaled(1.0), bytes_per_row=_bpr_of(ins.outputs[0]),
+                      ndv=tuple(left.ndv) + tuple(args[1].ndv))
+        return [out]
+
+    if op in ("rel.Limit", "vec.LimitVec", "vec.TopKVec"):
+        k = float(ins.param("k", first.rows))
+        return [first.scaled(min(1.0, k / max(first.rows, 1.0)))]
+
+    if op == "cf.Split":
+        n = int(ins.param("n"))
+        return [first.scaled(1.0 / max(n, 1))]
+
+    if op == "cf.Broadcast":
+        return [first]
+
+    if op == "cf.Merge":
+        n = _seq_n(ins.inputs[0])
+        return [first.scaled(float(n))]
+
+    if op == "cf.CombineChunks":
+        return [first]
+
+    if op == "cf.TakeChunk":
+        return [first]
+
+    if op in ("cf.ConcurrentExecute", "mesh.MeshExecute"):
+        inner: Program = ins.param("P")
+        inner_in = {r.name: s for r, s in zip(inner.inputs, args)}
+        propagate(inner, stats, inner_in, env)
+        return [env.get(inner, r) for r in inner.results]
+
+    if op == "mesh.AllReduce":
+        return [first]
+
+    if op == "mesh.AllGatherVec":
+        n = int(ins.param("n", 1))
+        return [first.scaled(float(n))]
+
+    if op == "mesh.ExchangeByKey":
+        # redistribution: per-shard row count is preserved on average, but
+        # the key space is partitioned across the axis
+        n = int(ins.param("n", 1))
+        ndv = tuple((k, max(v / max(n, 1), 1.0)) for k, v in first.ndv)
+        return [replace(first, ndv=ndv)]
+
+    if op in ("cf.Loop", "cf.While", "cf.Cond", "cf.Call"):
+        inner = ins.param("P") or ins.param("Pthen")
+        if inner is not None:
+            inner_in = {r.name: s for r, s in
+                        zip(inner.inputs, args[1:] if op == "cf.Cond" else args)}
+            propagate(inner, stats, inner_in, env)
+        return [RegStats(rows=first.rows, bytes_per_row=_bpr_of(o))
+                for o in ins.outputs]
+
+    # unknown instruction: pass the first input's estimate through, one per
+    # output (the "leave it as is" contract of the rewrite rules)
+    return [replace(first, bytes_per_row=_bpr_of(o)) for o in ins.outputs]

@@ -1,0 +1,96 @@
+"""Content-addressed on-disk store for compiled-plan metadata.
+
+Executables (jitted callables) cannot be serialized, but everything needed
+to *re-plan cheaply* can: the structural fingerprint, the chosen lowering
+strategy, the pass records, and the cost estimates.  Spilling that metadata
+keyed by the full plan-cache key means a restarted process (serve restarts,
+elastic re-planning) skips the costed candidate search and re-lowers
+straight down the previously chosen path, and the cost calibration keeps
+learning across processes instead of starting cold.
+
+Layout (``<root>/``):
+  * ``<keyhash>.json``  — one plan record per (target, epoch, fingerprint,
+    options) key, hashed content-address
+  * ``calibration.json`` — the shared :class:`CostCalibration` state
+
+Writes are atomic (tmp + rename) so concurrent processes can share a store
+directory.  The default location honours ``REPRO_PLAN_STORE`` so serving
+stacks can turn persistence on without code changes.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Union
+
+from .cost import CostCalibration
+
+__all__ = ["PlanStore", "default_store"]
+
+
+class PlanStore:
+    """Directory-backed, content-addressed plan-metadata store."""
+
+    def __init__(self, root: Union[str, Path]) -> None:
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    # -- paths -------------------------------------------------------------
+    def _plan_path(self, key_hash: str) -> Path:
+        return self.root / f"{key_hash}.json"
+
+    @property
+    def _calib_path(self) -> Path:
+        return self.root / "calibration.json"
+
+    # -- plan records --------------------------------------------------------
+    def save_plan(self, key_hash: str, record: Dict[str, Any]) -> None:
+        record = dict(record)
+        record.setdefault("saved_at", time.time())
+        self._atomic_write(self._plan_path(key_hash), record)
+
+    def load_plan(self, key_hash: str) -> Optional[Dict[str, Any]]:
+        path = self._plan_path(key_hash)
+        try:
+            return json.loads(path.read_text())
+        except (OSError, ValueError):
+            return None
+
+    def __len__(self) -> int:
+        return sum(1 for p in self.root.glob("*.json")
+                   if p.name != "calibration.json")
+
+    # -- calibration ---------------------------------------------------------
+    def load_calibration(self) -> CostCalibration:
+        try:
+            return CostCalibration.from_dict(
+                json.loads(self._calib_path.read_text()))
+        except (OSError, ValueError):
+            return CostCalibration()
+
+    def save_calibration(self, calib: CostCalibration) -> None:
+        self._atomic_write(self._calib_path, calib.to_dict())
+
+    # -- internals -----------------------------------------------------------
+    def _atomic_write(self, path: Path, payload: Dict[str, Any]) -> None:
+        fd, tmp = tempfile.mkstemp(dir=str(self.root), suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=2, default=str)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+
+def default_store() -> Optional[PlanStore]:
+    """The environment-configured store (``REPRO_PLAN_STORE``), if any."""
+    root = os.environ.get("REPRO_PLAN_STORE")
+    return PlanStore(root) if root else None

@@ -30,13 +30,15 @@ from ..core.passes import (
     LowerToMesh,
     Parallelize,
     PushCombineIntoMesh,
+    PushGroupedCombineIntoMesh,
 )
 from ..core.passes.lower_vec import Catalog, LowerRelToVec
 
 __all__ = [
-    "CompileOptions", "Stage", "Target",
+    "CompileOptions", "Stage", "Choice", "Target",
     "register_target", "get_target", "available_targets",
     "CANONICALIZE", "PARALLELIZE", "LOWER_REL_TO_VEC", "FUSE", "LOWER_TO_MESH",
+    "FUSE_CHOICE", "GROUPED_RECOMBINE",
 ]
 
 
@@ -58,13 +60,24 @@ class CompileOptions:
     catalog: Optional[Catalog] = None
     mesh: Any = None
     parallelize_targets: Optional[Tuple[str, ...]] = None
+    #: None → fixed default lowering path; "cost" → enumerate the target's
+    #: Choice points and pick the cheapest candidate under the cost model
+    optimize: Optional[str] = None
+    #: explicit strategy overrides ((choice-name, label), ...) — forces
+    #: specific variants regardless of the optimizer
+    strategy: Optional[Tuple[Tuple[str, str], ...]] = None
+
+    def stats(self):
+        return self.catalog.stats if self.catalog is not None else None
 
     def cache_key(self) -> Tuple:
         cat = None
         if self.catalog is not None:
+            stats = self.catalog.stats
             cat = (tuple(sorted(self.catalog.capacities.items())),
                    self.catalog.default_max_groups,
-                   self.catalog.join_selectivity)
+                   self.catalog.join_selectivity,
+                   stats.cache_key() if stats is not None else None)
         mesh_key = None
         if self.mesh is not None:
             axis_names = tuple(getattr(self.mesh, "axis_names", ()))
@@ -79,7 +92,7 @@ class CompileOptions:
             mesh_key = (axis_names, shape, dev_ids)
         return (self.parallel, self.use_kernels, self.fuse, self.axis,
                 self.jit, self.collectives, self.parallelize_targets,
-                cat, mesh_key)
+                cat, mesh_key, self.optimize, self.strategy)
 
 
 # ---------------------------------------------------------------------------
@@ -137,20 +150,89 @@ LOWER_TO_MESH = Stage("lower-to-mesh", _lower_to_mesh)
 
 
 # ---------------------------------------------------------------------------
+# strategy choices
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Choice:
+    """A strategy point in a lowering path: named alternative Stage variants.
+
+    Under the default compile the ``default`` variant runs; under
+    ``optimize="cost"`` the driver enumerates every available variant,
+    costs the resulting candidate plans, and picks the cheapest.  An
+    ``available`` predicate can narrow the variants for given options
+    (e.g. no exchange strategy when collectives are disabled).
+    """
+
+    name: str
+    variants: Tuple[Tuple[str, Stage], ...]
+    default: str
+    available: Optional[Callable[[CompileOptions], Tuple[str, ...]]] = None
+
+    def labels(self, opts: CompileOptions) -> Tuple[str, ...]:
+        if self.available is not None:
+            return tuple(self.available(opts))
+        return tuple(label for label, _ in self.variants)
+
+    def variant(self, label: str) -> Stage:
+        for l, stage in self.variants:
+            if l == label:
+                return stage
+        raise KeyError(
+            f"choice {self.name!r} has no variant {label!r}; "
+            f"known: {[l for l, _ in self.variants]}")
+
+
+_NO_FUSE = Stage("no-fuse", lambda opts: [])
+_GROUPED_GATHER = Stage("grouped-gather", lambda opts: [])
+_GROUPED_EXCHANGE = Stage(
+    "grouped-exchange", lambda opts: [PushGroupedCombineIntoMesh()])
+
+#: fuse vs no-fuse for FuseSelectAgg (JITQ's single-pass Q6 shape): fusing
+#: saves passes over the block but denies the backend intermediate reuse
+FUSE_CHOICE = Choice(
+    name="fuse",
+    variants=(("fused", FUSE), ("unfused", _NO_FUSE)),
+    default="fused",
+    available=lambda opts: ("fused", "unfused") if opts.fuse else ("unfused",),
+)
+
+#: grouped recombine after a MeshExecute: gather-then-aggregate (cheap at
+#: low group cardinality) vs mesh.ExchangeByKey + per-shard aggregation
+#: (wins when the partial-aggregate gather would swamp one device)
+GROUPED_RECOMBINE = Choice(
+    name="grouped-recombine",
+    variants=(("gather", _GROUPED_GATHER), ("exchange", _GROUPED_EXCHANGE)),
+    default="gather",
+    available=lambda opts: (("gather", "exchange") if opts.collectives
+                            else ("gather",)),
+)
+
+
+# ---------------------------------------------------------------------------
 # targets
 # ---------------------------------------------------------------------------
 
 
 @dataclass(frozen=True)
 class Target:
-    """A registered backend: lowering path + backend factory + data model."""
+    """A registered backend: lowering path + backend factory + data model.
+
+    ``lowering_path`` entries are :class:`Stage`\\ s (always run) or
+    :class:`Choice`\\ s (strategy points the cost-based optimizer may
+    search over).
+    """
 
     name: str
     flavors: Tuple[str, ...]
-    lowering_path: Tuple[Stage, ...]
+    lowering_path: Tuple[Any, ...]  # Stage | Choice
     make_backend: Callable[[CompileOptions], Any]
     source_kind: str = "vec"  # "vec" (VecTable sources) | "numpy" (raw columns)
     needs_mesh: bool = False
+
+    def choices(self) -> Tuple[Choice, ...]:
+        return tuple(s for s in self.lowering_path if isinstance(s, Choice))
 
 
 _TARGETS: Dict[str, Target] = {}
@@ -223,7 +305,7 @@ register_target(Target(
 register_target(Target(
     name="local",
     flavors=("vec", "cf", "rel", "df", "la", "tz"),
-    lowering_path=(CANONICALIZE, PARALLELIZE, LOWER_REL_TO_VEC, FUSE),
+    lowering_path=(CANONICALIZE, PARALLELIZE, LOWER_REL_TO_VEC, FUSE_CHOICE),
     make_backend=_make_local,
     source_kind="vec",
 ))
@@ -231,8 +313,8 @@ register_target(Target(
 register_target(Target(
     name="spmd",
     flavors=("vec", "cf", "rel", "la", "mesh"),
-    lowering_path=(CANONICALIZE, PARALLELIZE, LOWER_REL_TO_VEC, FUSE,
-                   LOWER_TO_MESH),
+    lowering_path=(CANONICALIZE, PARALLELIZE, LOWER_REL_TO_VEC, FUSE_CHOICE,
+                   LOWER_TO_MESH, GROUPED_RECOMBINE),
     make_backend=_make_spmd,
     source_kind="vec",
     needs_mesh=True,
@@ -244,9 +326,37 @@ register_target(Target(
 register_target(Target(
     name="multipod",
     flavors=("vec", "cf", "rel", "la", "mesh"),
-    lowering_path=(CANONICALIZE, PARALLELIZE, LOWER_REL_TO_VEC, FUSE,
-                   LOWER_TO_MESH),
+    lowering_path=(CANONICALIZE, PARALLELIZE, LOWER_REL_TO_VEC, FUSE_CHOICE,
+                   LOWER_TO_MESH, GROUPED_RECOMBINE),
     make_backend=_make_spmd,
     source_kind="vec",
     needs_mesh=True,
+))
+
+
+# The tensor frontend's pjit binding, as a registered target: the LM
+# trainer's planning rewrite (Alg. 1 → Alg. 2) is the parallelize stage of
+# an ordinary lowering path, and ``compile(plan, target="pjit")`` yields a
+# plan-summary executable; ``lower_to_pjit`` passes a model-bound
+# ``PjitBackend`` via ``backend=`` to get a runnable train step.
+
+def _tensor_parallelize(opts: CompileOptions) -> Sequence[Any]:
+    targets = set(opts.parallelize_targets) if opts.parallelize_targets else None
+    return [Parallelize(n=opts.parallel or 1, targets=targets)]
+
+
+TENSOR_PARALLELIZE = Stage("parallelize", _tensor_parallelize)
+
+
+def _make_pjit(opts: CompileOptions) -> Any:
+    from ..frontends.tensor import PjitBackend
+    return PjitBackend()  # plan-only unless a model binding is supplied
+
+
+register_target(Target(
+    name="pjit",
+    flavors=("tz", "cf", "mesh"),
+    lowering_path=(CANONICALIZE, TENSOR_PARALLELIZE),
+    make_backend=_make_pjit,
+    source_kind="numpy",
 ))

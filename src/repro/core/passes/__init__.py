@@ -14,4 +14,6 @@ from .dce import DeadCodeElimination  # noqa: F401
 from .cse import CommonSubexpressionElimination  # noqa: F401
 from .parallelize import Parallelize  # noqa: F401
 from .fusion import FuseKMeansStep, FuseSelectAgg  # noqa: F401
-from .mesh_lower import LowerToMesh, PushCombineIntoMesh  # noqa: F401
+from .mesh_lower import (  # noqa: F401
+    LowerToMesh, PushCombineIntoMesh, PushGroupedCombineIntoMesh,
+)

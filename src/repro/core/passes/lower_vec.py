@@ -25,11 +25,18 @@ from ..types import ItemType
 
 @dataclass
 class Catalog:
-    """Physical metadata for lowering."""
+    """Physical metadata for lowering.
+
+    ``stats`` optionally carries a :class:`repro.compiler.stats.Statistics`
+    catalog (cardinality / NDV / bytes-per-row estimates); the compilation
+    driver's cost model reads it to choose between alternative physical
+    lowerings, and it is part of the plan-cache key.
+    """
 
     capacities: Dict[str, int] = field(default_factory=dict)
     default_max_groups: int = 1024
     join_selectivity: float = 1.0  # output-capacity factor for joins
+    stats: Optional[Any] = None   # repro.compiler.stats.Statistics
 
     def capacity(self, table: str) -> int:
         if table not in self.capacities:

@@ -308,6 +308,31 @@ def Stream(item: ItemType) -> CollectionType:
 # ---------------------------------------------------------------------------
 
 
+def atom_nbytes(a: Atom) -> int:
+    """Storage bytes of one atom value (from its numpy dtype)."""
+    import numpy as np
+
+    return int(np.dtype(ATOM_DOMAINS[a.domain]).itemsize)
+
+
+def item_nbytes(t: ItemType, default: int = 8) -> int:
+    """Estimated bytes per item: the statistics/cost hooks of the type grammar.
+
+    Atoms answer exactly; tuples sum their fields; collections answer per
+    *element* of the collection (a row of a relation, a scalar of a tensor).
+    Unknown/opaque items fall back to ``default``.
+    """
+    if isinstance(t, Atom):
+        return atom_nbytes(t)
+    if isinstance(t, TupleType):
+        if not t.fields:
+            return default
+        return sum(item_nbytes(ft, default) for _, ft in t.fields)
+    if isinstance(t, CollectionType):
+        return item_nbytes(t.item, default)
+    return default
+
+
 def is_coll(t: ItemType, kind: Optional[CollectionKind] = None) -> bool:
     return isinstance(t, CollectionType) and (kind is None or t.kind is kind)
 

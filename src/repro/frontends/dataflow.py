@@ -171,9 +171,11 @@ class Frame:
 
     def collect(self, parallel: Optional[int] = None, use_kernels: bool = False,
                 backend: Optional[Any] = None,
-                target: str = "local") -> Dict[str, np.ndarray]:
+                target: str = "local",
+                optimize: Optional[str] = None) -> Dict[str, np.ndarray]:
         return self._ctx.execute(self, parallel=parallel, use_kernels=use_kernels,
-                                 backend=backend, target=target)
+                                 backend=backend, target=target,
+                                 optimize=optimize)
 
 
 class GroupBy:
@@ -211,6 +213,7 @@ class Context:
         self.tables: Dict[str, Dict[str, np.ndarray]] = {}
         self.schemas: Dict[str, TupleType] = {}
         self.pad_to = pad_to
+        self._stats = None  # lazily computed Statistics; reset on register
 
     # -- catalog ---------------------------------------------------------------
     def register(self, name: str, data: Mapping[str, np.ndarray],
@@ -220,6 +223,7 @@ class Context:
             schema = TupleType(tuple((k, _infer_atom(v)) for k, v in data.items()))
         self.tables[name] = data
         self.schemas[name] = schema
+        self._stats = None
 
     def table(self, name: str) -> Frame:
         schema = self.schemas[name]
@@ -232,13 +236,32 @@ class Context:
         p = self.pad_to
         return max(p, ((n + p - 1) // p) * p)
 
-    def catalog(self):
+    def statistics(self):
+        """Exact table statistics from the registered columns (cached).
+
+        These feed the driver's cost-based plan selection via
+        ``Catalog.stats`` → ``CompileOptions``.
+        """
+        if self._stats is None:
+            from ..compiler.stats import Statistics, stats_from_columns
+
+            self._stats = Statistics.make(
+                {name: stats_from_columns(cols)
+                 for name, cols in self.tables.items()})
+        return self._stats
+
+    def catalog(self, with_stats: bool = True):
+        """The lowering catalog; ``with_stats=False`` skips the (memoized
+        but O(n log n) per column) exact-statistics computation for compiles
+        that will never consult them."""
         from ..core.passes.lower_vec import Catalog
-        return Catalog(capacities={t: self.capacity(t) for t in self.tables})
+        return Catalog(capacities={t: self.capacity(t) for t in self.tables},
+                       stats=self.statistics() if with_stats else None)
 
     def compile(self, frame: Frame, parallel: Optional[int] = None,
                 use_kernels: bool = False, fuse: bool = True, backend: Any = None,
-                target: str = "local", cache: Any = None):
+                target: str = "local", cache: Any = None,
+                optimize: Optional[str] = None, strategy: Any = None):
         """Compile through the unified driver — the single entry point for
         every target's declarative lowering path (and the plan cache)."""
         from ..compiler import compile as cvm_compile
@@ -247,11 +270,13 @@ class Context:
             frame.program(),
             target=target,
             parallel=parallel,
-            catalog=self.catalog(),
+            catalog=self.catalog(with_stats=optimize == "cost"),
             use_kernels=use_kernels,
             fuse=fuse,
             backend=backend,
             cache=cache,
+            optimize=optimize,
+            strategy=strategy,
         )
 
     def sources(self) -> Dict[str, Any]:
@@ -264,11 +289,13 @@ class Context:
 
     def execute(self, frame: Frame, parallel: Optional[int] = None,
                 use_kernels: bool = False, backend: Any = None,
-                target: str = "local") -> Dict[str, np.ndarray]:
+                target: str = "local",
+                optimize: Optional[str] = None) -> Dict[str, np.ndarray]:
         from ..compiler import get_target
 
         compiled = self.compile(frame, parallel=parallel, use_kernels=use_kernels,
-                                backend=backend, target=target)
+                                backend=backend, target=target,
+                                optimize=optimize)
         src = (self.tables if get_target(target).source_kind == "numpy"
                else self.sources())
         (out,) = compiled(src)

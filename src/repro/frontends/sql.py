@@ -243,10 +243,13 @@ def parse(sql: str, ctx: Context) -> Frame:
 
 
 def query(ctx: Context, sql: str, target: str = "local",
-          parallel: Optional[int] = None):
+          parallel: Optional[int] = None, optimize: Optional[str] = None):
     """Parse + execute through the unified compilation driver.
 
     ``target``/``parallel`` select the registered lowering path, so a SQL
     query reaches every backend the Python frontend does.
+    ``optimize="cost"`` lets the driver choose between the target's
+    alternative physical lowerings using the context's table statistics.
     """
-    return parse(sql, ctx).collect(target=target, parallel=parallel)
+    return parse(sql, ctx).collect(target=target, parallel=parallel,
+                                   optimize=optimize)

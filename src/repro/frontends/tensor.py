@@ -22,6 +22,7 @@ exactly this artifact.
 
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -43,14 +44,13 @@ def pytree_type(tag: str) -> CollectionType:
 
 def plan_train_program(model: Model, n_data: int,
                        records: Optional[list] = None) -> Program:
-    """Build the sequential step program and parallelize it over n_data.
+    """Build the sequential step program and plan it via the ``pjit`` target.
 
-    The planning rewrite runs through the compilation driver's instrumented
-    pass runner (``records`` collects per-pass timings like any other
-    driver-compiled program).
+    The Alg. 1 → Alg. 2 rewrite (split the batch, push the pipeline inside,
+    pre-aggregate gradients) is the registered ``pjit`` target's lowering
+    path, run through the unified compilation driver like every other
+    frontend (``records`` collects the driver's per-pass timings).
     """
-    from ..core.passes import Parallelize
-
     cfg = model.cfg
     grad_name = f"grad_{cfg.arch}"
     register_pipeline(grad_name, None, overwrite=True)  # bound at lowering
@@ -70,12 +70,14 @@ def plan_train_program(model: Model, n_data: int,
     program = b.finish(new_params, new_opt, loss)
     verify(program)
 
-    # Alg. 1 → Alg. 2: split the batch, push the pipeline inside, pre-agg.
-    from ..compiler.driver import run_passes
+    from ..compiler import compile as cvm_compile
 
-    program = run_passes(program, [Parallelize(n=n_data, targets={batch.name})],
-                         stage="tensor-plan", records=records)
-    return program
+    res = cvm_compile(program, target="pjit", parallel=n_data,
+                      parallelize_targets=[batch.name], cache=False,
+                      store=False)
+    if records is not None:
+        records.extend(res.records)
+    return res.program
 
 
 class _PlanError(Exception):
@@ -101,34 +103,94 @@ def plan_summary(program: Program) -> Dict[str, Any]:
     }
 
 
+@dataclass
+class PjitCompiled:
+    """A compiled pjit plan: the program, its summary, and (when a model is
+    bound) the jitted train step."""
+
+    program: Program
+    summary: Optional[Dict[str, Any]]
+    fn: Optional[Any] = None
+
+    def __call__(self, *args: Any) -> Any:
+        # unlike the relational backends there is no sources dict: every
+        # positional argument is a train-step argument (params, opt, batch)
+        if self.fn is None:
+            raise RuntimeError(
+                "plan-only pjit compile: pass backend=PjitBackend(model=..., "
+                "mesh=..., optimizer=..., batch_shapes=...) to bind a "
+                "runnable train step")
+        return self.fn(*args)
+
+
+@dataclass
+class PjitBackend:
+    """Backend for the registered ``pjit`` target.
+
+    Without a model binding it compiles *plans* (the distribution decisions
+    only); bound to a model/mesh/optimizer it emits the concrete jitted
+    train step.  The plan dictates: which inputs are data-split (→ batch
+    specs over the dp axes), which are broadcast (→ replicated over dp,
+    model-sharded per the weight table), and that gradients pre-aggregate
+    across workers (→ GSPMD all-reduce, implicit in the replicated-param
+    gradient).
+    """
+
+    name = "pjit"
+
+    model: Optional[Model] = None
+    mesh: Any = None
+    optimizer: Optional[Optimizer] = None
+    batch_shapes: Optional[Dict[str, Any]] = None
+    microbatch: int = 1
+
+    def compile(self, program: Program) -> PjitCompiled:
+        try:
+            summary = plan_summary(program)
+        except _PlanError:
+            summary = None
+        if self.model is None:
+            return PjitCompiled(program, summary)
+
+        from ..models import sharding as shd
+
+        if summary is None or not summary["split"]:
+            raise _PlanError("plan has no data split")
+
+        step, opt = make_train_step(self.model, self.optimizer,
+                                    microbatch=self.microbatch)
+
+        key_spec = jax.ShapeDtypeStruct((2,), jax.numpy.uint32)
+        params_shapes = jax.eval_shape(self.model.init, key_spec)
+        pspecs = shd.tree_param_specs(params_shapes, self.mesh)
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        ospecs = shd.tree_opt_specs(opt_shapes, pspecs, self.mesh, zero1=True)
+        bspecs = shd.batch_specs(
+            {k: (v.shape, v.dtype) for k, v in self.batch_shapes.items()},
+            self.mesh)
+
+        jitted = jax.jit(
+            step,
+            in_shardings=(shd.named(self.mesh, pspecs),
+                          shd.named(self.mesh, ospecs),
+                          shd.named(self.mesh, bspecs)),
+        )
+        return PjitCompiled(program, summary, jitted)
+
+
 def lower_to_pjit(program: Program, model: Model, mesh, optimizer: Optimizer,
                   batch_shapes: Dict[str, Any], microbatch: int = 1):
     """Bind the CVM plan to a concrete pjit'd train step.
 
-    The plan dictates: which inputs are data-split (→ batch specs over the
-    dp axes), which are broadcast (→ replicated over dp, model-sharded per
-    the weight table), and that gradients pre-aggregate across workers
-    (→ GSPMD all-reduce, implicit in the replicated-param gradient).
+    Routes through ``compile(program, target="pjit", backend=...)`` — the
+    registered target's lowering path — so the LM trainer compiles via the
+    unified driver like every other frontend.
     """
-    from ..models import sharding as shd
+    from ..compiler import compile as cvm_compile
 
-    summary = plan_summary(program)
-    if not summary["split"]:
-        raise _PlanError("plan has no data split")
-
-    step, opt = make_train_step(model, optimizer, microbatch=microbatch)
-
-    key_spec = jax.ShapeDtypeStruct((2,), jax.numpy.uint32)
-    params_shapes = jax.eval_shape(model.init, key_spec)
-    pspecs = shd.tree_param_specs(params_shapes, mesh)
-    opt_shapes = jax.eval_shape(opt.init, params_shapes)
-    ospecs = shd.tree_opt_specs(opt_shapes, pspecs, mesh, zero1=True)
-    bspecs = shd.batch_specs(
-        {k: (v.shape, v.dtype) for k, v in batch_shapes.items()}, mesh)
-
-    jitted = jax.jit(
-        step,
-        in_shardings=(shd.named(mesh, pspecs), shd.named(mesh, ospecs),
-                      shd.named(mesh, bspecs)),
-    )
-    return jitted, summary
+    be = PjitBackend(model=model, mesh=mesh, optimizer=optimizer,
+                     batch_shapes=batch_shapes, microbatch=microbatch)
+    res = cvm_compile(program, target="pjit", backend=be, cache=False,
+                      store=False)
+    compiled: PjitCompiled = res.executable
+    return compiled.fn, compiled.summary

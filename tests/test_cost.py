@@ -1,0 +1,379 @@
+"""Cost-based plan selection: statistics, cost search, store, pjit target.
+
+Covers the optimizer subsystem's contracts:
+  * table statistics propagate through rewritten programs — estimates
+    survive ``Parallelize``, ``FuseSelectAgg``, and ``LowerToMesh``;
+  * the plan-cache key covers the statistics (and therefore the chosen
+    strategy): changed stats can never serve a stale plan;
+  * ``optimize="cost"`` on the spmd target picks exchange-by-key at high
+    group cardinality and gather-then-aggregate at low cardinality, both
+    plans agree with the interp oracle, and ``explain()`` shows the
+    decision (subprocess: spmd owns an 8-device host platform);
+  * plan metadata persists to the on-disk store and a fresh process-alike
+    (new cache, same store) re-plans from the stored strategy;
+  * the tensor frontend's pjit binding is a registered target.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.compiler import (
+    PlanCache,
+    PlanStore,
+    Statistics,
+    TableStats,
+    compile as cvm_compile,
+    estimate_cost,
+    get_target,
+    propagate,
+)
+from repro.core.expr import col
+from repro.core.passes import FuseSelectAgg, LowerToMesh, Parallelize
+from repro.core.passes.lower_vec import Catalog, LowerRelToVec
+from repro.frontends.dataflow import Context, count_, sum_
+from repro.launch.hermetic import subprocess_env
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture()
+def sales_ctx():
+    rng = np.random.default_rng(3)
+    n = 4096
+    ctx = Context(pad_to=512)
+    ctx.register("sales", {
+        "k": rng.integers(0, 1024, n).astype(np.int32),
+        "amount": rng.gamma(2.0, 50.0, n).astype(np.float32),
+        "year": rng.integers(2018, 2026, n).astype(np.int32),
+    })
+    return ctx
+
+
+def grouped_query(ctx, max_groups=1024):
+    return (ctx.table("sales")
+            .group_by("k", max_groups=max_groups)
+            .agg(sum_("amount").as_("rev"), count_().as_("n")))
+
+
+def scalar_query(ctx):
+    return (ctx.table("sales")
+            .filter(col("year") >= 2020)
+            .agg(sum_("amount").as_("rev")))
+
+
+# ---------------------------------------------------------------------------
+# statistics propagation
+# ---------------------------------------------------------------------------
+
+
+class TestStatsPropagation:
+    def test_context_statistics_are_exact(self, sales_ctx):
+        ts = sales_ctx.statistics().table("sales")
+        assert ts.rows == 4096
+        assert 900 < ts.ndv_of("k") <= 1024  # exact distinct count of the draw
+        assert ts.ndv_of("year") == 8
+        assert ts.bytes_per_row == 12.0  # i32 + f32 + i32
+        assert sales_ctx.catalog().stats is sales_ctx.statistics()
+
+    def test_stats_survive_parallelize_and_lowering(self, sales_ctx):
+        stats = sales_ctx.statistics()
+        catalog = sales_ctx.catalog()
+        ndv_k = stats.table("sales").ndv_of("k")
+        program = grouped_query(sales_ctx).program()
+
+        program = Parallelize(n=4).apply(program)
+        env = propagate(program, stats)
+        # the final (recombine) grouped aggregation still estimates from the
+        # base-table NDV, through Split/ConcurrentExecute/Merge
+        final = env.get(program, program.results[0])
+        assert final.rows == pytest.approx(ndv_k, rel=0.01)
+
+        program = LowerRelToVec(catalog).apply(program)
+        env = propagate(program, stats)
+        final = env.get(program, program.results[0])
+        assert final.rows == pytest.approx(ndv_k, rel=0.01)
+
+        program = LowerToMesh("workers").apply(program)
+        env = propagate(program, stats)
+        final = env.get(program, program.results[0])
+        assert final.rows == pytest.approx(ndv_k, rel=0.01)
+        assert "mesh.MeshExecute" in program.opcodes()
+
+    def test_stats_survive_fusion(self, sales_ctx):
+        stats = sales_ctx.statistics()
+        program = scalar_query(sales_ctx).program()
+        program = LowerRelToVec(sales_ctx.catalog()).apply(program)
+        program = FuseSelectAgg().apply(program)
+        assert "vec.FusedSelectAgg" in program.opcodes()
+        env = propagate(program, stats)
+        final = env.get(program, program.results[0])
+        assert final.rows == 1.0  # scalar aggregate
+
+    def test_cost_scales_with_stats(self, sales_ctx):
+        program = LowerRelToVec(sales_ctx.catalog()).apply(
+            grouped_query(sales_ctx).program())
+        small = Statistics.make({"sales": TableStats.make(512, 12.0, {"k": 4})})
+        big = Statistics.make(
+            {"sales": TableStats.make(1 << 20, 12.0, {"k": 1 << 16})})
+        assert estimate_cost(program, big) > estimate_cost(program, small)
+
+
+# ---------------------------------------------------------------------------
+# cost-keyed plan cache
+# ---------------------------------------------------------------------------
+
+
+class TestCostKeyedCache:
+    def test_different_stats_never_hit_stale_plan(self, sales_ctx):
+        cache = PlanCache()
+        q = grouped_query(sales_ctx)
+        program = q.program()
+        caps = {"sales": sales_ctx.capacity("sales")}
+        lo = Catalog(capacities=caps, stats=Statistics.make(
+            {"sales": TableStats.make(4096, 12.0, {"k": 4})}))
+        hi = Catalog(capacities=caps, stats=Statistics.make(
+            {"sales": TableStats.make(4096, 12.0, {"k": 4096})}))
+
+        r1 = cvm_compile(program, target="local", parallel=4, catalog=lo,
+                         optimize="cost", cache=cache)
+        r2 = cvm_compile(program, target="local", parallel=4, catalog=hi,
+                         optimize="cost", cache=cache)
+        r3 = cvm_compile(program, target="local", parallel=4, catalog=lo,
+                         optimize="cost", cache=cache)
+        assert not r1.cache_hit
+        assert not r2.cache_hit  # changed stats → different key → re-planned
+        assert r3.cache_hit      # same stats → same plan served
+
+    def test_forced_strategy_is_part_of_the_key(self, sales_ctx):
+        cache = PlanCache()
+        q = scalar_query(sales_ctx)
+        r1 = sales_ctx.compile(q, cache=cache, strategy={"fuse": "fused"})
+        r2 = sales_ctx.compile(q, cache=cache, strategy={"fuse": "unfused"})
+        assert not r2.cache_hit
+        assert dict(r1.strategy)["fuse"] == "fused"
+        assert dict(r2.strategy)["fuse"] == "unfused"
+        assert "vec.FusedSelectAgg" in r1.program.opcodes()
+        assert "vec.FusedSelectAgg" not in r2.program.opcodes()
+
+    def test_unknown_strategy_rejected(self, sales_ctx):
+        q = scalar_query(sales_ctx)
+        with pytest.raises(ValueError, match="no strategy choice"):
+            sales_ctx.compile(q, strategy={"grouped_recombine": "exchange"})
+        with pytest.raises(ValueError, match="no variant"):
+            sales_ctx.compile(q, strategy={"fuse": "mega"})
+        with pytest.raises(ValueError, match="mapping"):
+            sales_ctx.compile(q, strategy="fused")
+
+    def test_cost_mode_prefers_fusion(self, sales_ctx):
+        res = sales_ctx.compile(scalar_query(sales_ctx), optimize="cost",
+                                cache=PlanCache())
+        assert dict(res.strategy)["fuse"] == "fused"
+        assert res.decision is not None
+        assert res.decision.source == "search"
+        labels = [c.label() for c in res.decision.candidates]
+        assert any("unfused" in l for l in labels)
+        assert "cost search" in res.explain()
+
+
+# ---------------------------------------------------------------------------
+# plan-store persistence
+# ---------------------------------------------------------------------------
+
+
+class TestPlanStore:
+    def test_replan_from_store_skips_search(self, sales_ctx, tmp_path):
+        store = PlanStore(tmp_path / "plans")
+        q = grouped_query(sales_ctx)
+        program = q.program()
+        kw = dict(target="local", parallel=4, catalog=sales_ctx.catalog(),
+                  optimize="cost", store=store)
+
+        r1 = cvm_compile(program, cache=PlanCache(), **kw)
+        assert r1.decision.source == "search"
+        assert len(store) == 1
+
+        # "restart": fresh in-memory cache, same store directory
+        r2 = cvm_compile(program, cache=PlanCache(), **kw)
+        assert not r2.cache_hit
+        assert r2.decision.source == "store"
+        assert r2.strategy == r1.strategy
+
+    def test_store_record_contents(self, sales_ctx, tmp_path):
+        store = PlanStore(tmp_path / "plans")
+        cvm_compile(grouped_query(sales_ctx).program(), target="local",
+                    parallel=4, catalog=sales_ctx.catalog(), optimize="cost",
+                    cache=PlanCache(), store=store)
+        (rec_path,) = [p for p in Path(store.root).glob("*.json")
+                       if p.name != "calibration.json"]
+        rec = json.loads(rec_path.read_text())
+        assert rec["target"] == "local"
+        assert rec["fingerprint"]
+        assert dict(rec["strategy"])  # the chosen strategy is recorded
+        assert rec["records"]         # pass records (PassRecord history)
+        calib = store.load_calibration()
+        assert calib.n >= 1 and calib.scale > 0
+
+    def test_corrupt_record_is_ignored(self, sales_ctx, tmp_path):
+        store = PlanStore(tmp_path / "plans")
+        q = grouped_query(sales_ctx).program()
+        kw = dict(target="local", parallel=4, catalog=sales_ctx.catalog(),
+                  optimize="cost", store=store)
+        cvm_compile(q, cache=PlanCache(), **kw)
+        for p in Path(store.root).glob("*.json"):
+            p.write_text("{corrupt")
+        r = cvm_compile(q, cache=PlanCache(), **kw)
+        assert r.decision.source == "search"  # fell back to a fresh search
+
+
+# ---------------------------------------------------------------------------
+# pjit target
+# ---------------------------------------------------------------------------
+
+
+class TestPjitTarget:
+    def test_registered(self):
+        tgt = get_target("pjit")
+        assert tgt.flavors == ("tz", "cf", "mesh")
+        assert [s.name for s in tgt.lowering_path] == ["canonicalize",
+                                                       "parallelize"]
+
+    def test_plan_only_compile_via_driver(self):
+        from repro.core import Builder
+        from repro.core.ops.tensor import register_pipeline
+        from repro.core.types import F32, Single, TupleType
+        from repro.frontends.tensor import pytree_type
+
+        register_pipeline("grad_cost_test", None, overwrite=True)
+        b = Builder("train_cost_test")
+        params = b.input("params", pytree_type("params"))
+        opt_state = b.input("opt", pytree_type("opt_state"))
+        batch = b.input("batch", pytree_type("batch"))
+        grads, loss = b.emit(
+            "tz.Pipeline", [batch, params],
+            {"fn": "grad_cost_test",
+             "out_types": (pytree_type("grads"),
+                           Single(TupleType.of(loss=F32)))})
+        new_params, new_opt = b.emit(
+            "tz.OptUpdate", [params, opt_state, grads], {"opt": "adamw"})
+        program = b.finish(new_params, new_opt, loss)
+
+        res = cvm_compile(program, target="pjit", parallel=4,
+                          parallelize_targets=[batch.name], cache=False,
+                          store=False)
+        assert "cf.ConcurrentExecute" in res.program.opcodes()
+        assert res.executable.summary["n_workers"] == 4
+        with pytest.raises(RuntimeError, match="plan-only"):
+            res.executable()
+
+
+# ---------------------------------------------------------------------------
+# the acceptance scenario: spmd cost-based choice (own device fleet)
+# ---------------------------------------------------------------------------
+
+SPMD_COST_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+
+    from repro.compiler import (PlanCache, Statistics, TableStats,
+                                compile as cvm_compile)
+    from repro.core.passes.lower_vec import Catalog
+    from repro.frontends.dataflow import Context, count_, sum_
+
+    rng = np.random.default_rng(5)
+    n = 8192
+    ctx = Context(pad_to=1024)
+    ctx.register("sales", {
+        "k": rng.integers(0, 2048, n).astype(np.int32),
+        "amount": rng.gamma(2.0, 50.0, n).astype(np.float32),
+    })
+    caps = {"sales": ctx.capacity("sales")}
+
+    def query(max_groups):
+        return (ctx.table("sales").group_by("k", max_groups=max_groups)
+                .agg(sum_("amount").as_("rev"), count_().as_("n")))
+
+    out = {}
+
+    # synthetic stats: high key cardinality -> exchange must win
+    hi = Catalog(capacities=caps, stats=Statistics.make(
+        {"sales": TableStats.make(8192, 8.0, {"k": 2048})}))
+    res_hi = cvm_compile(query(2048).program(), target="spmd", parallel=8,
+                         catalog=hi, optimize="cost", cache=False)
+    out["hi_strategy"] = dict(res_hi.strategy)
+    out["hi_mesh_ops"] = [o for o in res_hi.program.opcodes()
+                          if o.startswith("mesh.")]
+    out["hi_explain"] = res_hi.explain()
+
+    # synthetic stats: low key cardinality -> gather must win
+    lo = Catalog(capacities=caps, stats=Statistics.make(
+        {"sales": TableStats.make(8192, 8.0, {"k": 4})}))
+    res_lo = cvm_compile(query(8).program(), target="spmd", parallel=8,
+                         catalog=lo, optimize="cost", cache=False)
+    out["lo_strategy"] = dict(res_lo.strategy)
+    out["lo_mesh_ops"] = [o for o in res_lo.program.opcodes()
+                          if o.startswith("mesh.")]
+
+    # both physical plans agree with the interp oracle
+    want = ctx.execute(query(2048), target="interp")
+    o_w = np.argsort(np.asarray(want["k"]).ravel())
+    for label in ("gather", "exchange"):
+        res = cvm_compile(query(2048).program(), target="spmd", parallel=8,
+                          catalog=hi, strategy={"grouped-recombine": label},
+                          cache=False)
+        (got_t,) = res(ctx.sources())
+        got = got_t.to_numpy()
+        o_g = np.argsort(got["k"])
+        np.testing.assert_allclose(
+            got["rev"][o_g], np.asarray(want["rev"]).ravel()[o_w], rtol=1e-4)
+        np.testing.assert_array_equal(
+            got["n"][o_g], np.asarray(want["n"]).ravel()[o_w])
+        out[label + "_ok"] = True
+        out[label + "_mesh_ops"] = [o for o in res.program.opcodes()
+                                    if o.startswith("mesh.")]
+    print("RESULTS" + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def spmd_cost_results():
+    proc = subprocess.run(
+        [sys.executable, "-c", SPMD_COST_SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        env=subprocess_env(ROOT),
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULTS")][0]
+    return json.loads(line[len("RESULTS"):])
+
+
+class TestSpmdCostChoice:
+    def test_high_cardinality_selects_exchange(self, spmd_cost_results):
+        r = spmd_cost_results
+        assert r["hi_strategy"]["grouped-recombine"] == "exchange"
+        assert "mesh.ExchangeByKey" in r["hi_mesh_ops"]
+
+    def test_low_cardinality_selects_gather(self, spmd_cost_results):
+        r = spmd_cost_results
+        assert r["lo_strategy"]["grouped-recombine"] == "gather"
+        assert "mesh.ExchangeByKey" not in r["lo_mesh_ops"]
+
+    def test_both_plans_match_interp(self, spmd_cost_results):
+        assert spmd_cost_results["gather_ok"]
+        assert spmd_cost_results["exchange_ok"]
+        # the exchange plan really recombines inside the mesh, not by gather
+        assert "mesh.ExchangeByKey" in spmd_cost_results["exchange_mesh_ops"]
+
+    def test_explain_shows_candidates_and_decision(self, spmd_cost_results):
+        text = spmd_cost_results["hi_explain"]
+        assert "cost search" in text
+        assert "grouped-recombine=gather" in text
+        assert "grouped-recombine=exchange" in text
+        assert "winner" in text

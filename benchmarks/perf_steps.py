@@ -14,12 +14,15 @@ in-process target, including the plan-cache effect of a repeated compile.
 
 Results → artifacts/perf_steps/<cell>__<step>.json,
 artifacts/perf_steps/compile_passes__<target>.json (pass records + the
-cost-model decision records when the costed search ran), and markdown
-tables on stdout.
+cost-model decision records when the costed search ran), BENCH_5.json at
+the repo root (grouped-aggregation strategy trajectory: us/call for the
+sorted vs direct physical tiers at low and high NDV, plus the costed
+driver's decision), and markdown tables on stdout.
 
 Usage: PYTHONPATH=src:. python benchmarks/perf_steps.py [--compile-only]
 (--compile-only runs just the compile-pass/cost report — the artifact CI
-uploads per PR.)
+uploads per PR; --groupby-bench runs just the BENCH_5.json group-by
+strategy benchmark.)
 """
 
 import json
@@ -125,11 +128,85 @@ def compile_pass_report():
           f"lookup={lookup_ms:.3f} ms (first compile {res.total_s * 1e3:.2f} ms)")
 
 
+def groupby_bench_report(reps: int = 20):
+    """Forced sorted-vs-direct grouped-aggregation wall times → BENCH_5.json.
+
+    Two cells: a TPC-H Q1-style low-NDV grouping (two small-domain keys,
+    selective filter — where the sort-free tier must win ≥1.5×) and a
+    high-NDV grouping over a 2^17-value key domain (where the dense bucket
+    table swamps one pass and the sorted tier should hold).  Also records
+    what ``optimize="cost"`` actually picked per cell, so future PRs have a
+    perf + decision trajectory to compare against.
+    """
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax
+    import numpy as np
+    from repro.compiler import PlanCache, compile as cvm_compile
+    from repro.core.expr import col
+    from repro.frontends.dataflow import Context, count_, sum_
+
+    rng = np.random.default_rng(5)
+    n = 1 << 17
+    ctx = Context(pad_to=1024)
+    ctx.register("lineitem", {
+        "rf": rng.integers(0, 3, n).astype(np.int32),
+        "ls": rng.integers(0, 2, n).astype(np.int32),
+        "qty": rng.integers(1, 50, n).astype(np.int32),
+        "price": rng.gamma(2.0, 100.0, n).astype(np.float32),
+        "ship": rng.integers(0, 2500, n).astype(np.int32),
+    })
+    # high-NDV cell: key domain (2^20) ≫ rows (2^13) — the dense bucket
+    # table dwarfs one pass over the rows, so sorted should hold this side
+    # of the crossover
+    m = 1 << 13
+    ctx.register("orders", {
+        "okey": rng.integers(0, 1 << 20, m).astype(np.int32),
+        "total": rng.gamma(2.0, 100.0, m).astype(np.float32),
+    })
+    cells = {
+        "low_ndv_q1": (n, ctx.table("lineitem")
+                       .filter(col("ship") <= 2000)
+                       .group_by("rf", "ls", max_groups=8)
+                       .agg(sum_("qty").as_("sum_qty"),
+                            sum_("price").as_("rev"), count_().as_("cnt"))),
+        "high_ndv": (m, ctx.table("orders")
+                     .group_by("okey", max_groups=m)
+                     .agg(sum_("total").as_("rev"), count_().as_("cnt"))),
+    }
+
+    sources = ctx.sources()
+    record = {"bench": "groupby_sorted_vs_direct", "reps": reps}
+    for cell, (rows, q) in cells.items():
+        entry = {"rows": rows}
+        for label in ("sorted", "direct"):
+            res = ctx.compile(q, strategy={"groupby": label}, cache=PlanCache())
+            jax.block_until_ready(res(sources))  # compile + warm
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                jax.block_until_ready(res(sources))
+            entry[label + "_us"] = (time.perf_counter() - t0) / reps * 1e6
+        entry["speedup_direct"] = entry["sorted_us"] / entry["direct_us"]
+        decided = ctx.compile(q, optimize="cost", cache=PlanCache())
+        entry["decision"] = dict(decided.strategy).get("groupby")
+        record[cell] = entry
+        print(f"[perf] groupby {cell}: sorted {entry['sorted_us']:.0f} us, "
+              f"direct {entry['direct_us']:.0f} us "
+              f"({entry['speedup_direct']:.2f}x), "
+              f"cost picks {entry['decision']}", flush=True)
+
+    (ROOT / "BENCH_5.json").write_text(json.dumps(record, indent=2))
+    print(f"[perf] wrote {ROOT / 'BENCH_5.json'}")
+
+
 def main():
     OUT.mkdir(parents=True, exist_ok=True)
+    if "--groupby-bench" in sys.argv:
+        groupby_bench_report()
+        return
     compile_pass_report()
     if "--compile-only" in sys.argv:
         return
+    groupby_bench_report()
     for arch, shape in CELLS:
         for step, env_over in STEPS.items():
             out = OUT / f"{arch}__{shape}__{step}.json"

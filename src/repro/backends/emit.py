@@ -118,10 +118,32 @@ def _groupagg(ctx, ins, args):
                                 int(ins.param("max_groups")))]
 
 
+#: bucket counts beyond this skip the Pallas kernel (its per-block one-hot
+#: accumulator scales with num_buckets) and use the XLA segment reduction
+_KERNEL_MAX_BUCKETS = 4096
+
+
+@emitter("vec.GroupAggDirect")
+def _groupagg_direct(ctx, ins, args):
+    (t,) = args
+    keys = tuple(ins.param("keys"))
+    aggs = tuple(ins.param("aggs"))
+    mg = int(ins.param("max_groups"))
+    domains = tuple(ins.param("key_domains"))
+    nb = int(ins.param("num_buckets"))
+    pred = ins.param("pred")
+    if ctx.use_kernels and nb <= _KERNEL_MAX_BUCKETS:
+        from ..kernels import ops as kops
+        return [kops.grouped_select_agg(t, pred, keys, aggs, mg, domains, nb,
+                                        interpret=ctx.interpret)]
+    return [rt.group_agg_direct(t, keys, aggs, mg, domains, nb, pred=pred)]
+
+
 @emitter("vec.MergeJoinSorted")
 def _mergejoin(ctx, ins, args):
     return [rt.merge_join_sorted(args[0], args[1], ins.param("left_on"),
-                                 ins.param("right_on"), int(ins.param("max_count")))]
+                                 ins.param("right_on"), int(ins.param("max_count")),
+                                 key_domains=ins.param("key_domains"))]
 
 
 @emitter("vec.Compact")

@@ -162,6 +162,19 @@ def _groupby(interp, ins, args):
     return [out]
 
 
+@impl("vec.GroupAggDirect")
+def _vec_groupagg_direct(interp, ins, args):
+    """Reference semantics of the dense-bucket grouped aggregation: the
+    (optional) fused predicate, then exactly rel.GroupByAggr — the bucket
+    layout is a physical detail the oracle need not reproduce."""
+    (t,) = args
+    pred = ins.param("pred")
+    if pred is not None:
+        mask = np.asarray(evaluate(pred, t, np), dtype=bool)
+        t = _mask_table(t, mask)
+    return _groupby(interp, ins, [t])
+
+
 @impl("rel.Join")
 def _join(interp, ins, args):
     l, r = args

@@ -82,6 +82,14 @@ class CostModel:
         if op in ("vec.GroupAggSorted", "rel.GroupByAggr"):
             return 2.0 * rows * bpr
 
+        if op == "vec.GroupAggDirect":
+            # sort-free dense buckets: one pass over the rows plus the
+            # bucket-table epilogue (build + compact) — the term that grows
+            # with the key domain and hands the win back to the sorted tier
+            # at high NDV
+            nb = float(ins.param("num_buckets") or 1.0)
+            return rows * bpr + 2.0 * nb * outs[0].bytes_per_row
+
         if op in ("vec.MergeJoinSorted", "rel.Join"):
             right = args[1] if len(args) > 1 else args[0]
             probe = rows * max(math.log2(max(right.rows, 2.0)), 1.0) * bpr

@@ -51,6 +51,10 @@ class TableStats:
     rows: int
     bytes_per_row: float = 8.0
     ndv: Tuple[Tuple[str, int], ...] = ()  # per-column distinct-value counts
+    #: per-column value bounds (lo, hi), integral columns only — these are
+    #: what make *dense-bucket* physical operators (vec.GroupAggDirect,
+    #: domain-packed composite join keys) plannable
+    domains: Tuple[Tuple[str, Tuple[int, int]], ...] = ()
 
     def ndv_of(self, column: str, default: Optional[int] = None) -> Optional[int]:
         for name, n in self.ndv:
@@ -58,11 +62,21 @@ class TableStats:
                 return n
         return default
 
+    def domain_of(self, column: str) -> Optional[Tuple[int, int]]:
+        for name, d in self.domains:
+            if name == column:
+                return d
+        return None
+
     @staticmethod
     def make(rows: int, bytes_per_row: float = 8.0,
-             ndv: Optional[Mapping[str, int]] = None) -> "TableStats":
+             ndv: Optional[Mapping[str, int]] = None,
+             domains: Optional[Mapping[str, Tuple[int, int]]] = None,
+             ) -> "TableStats":
         return TableStats(int(rows), float(bytes_per_row),
-                          tuple(sorted((ndv or {}).items())))
+                          tuple(sorted((ndv or {}).items())),
+                          tuple(sorted((k, (int(lo), int(hi)))
+                                       for k, (lo, hi) in (domains or {}).items())))
 
 
 @dataclass(frozen=True)
@@ -82,7 +96,8 @@ class Statistics:
         return None
 
     def cache_key(self) -> Tuple:
-        return tuple((n, t.rows, t.bytes_per_row, t.ndv) for n, t in self.tables)
+        return tuple((n, t.rows, t.bytes_per_row, t.ndv, t.domains)
+                     for n, t in self.tables)
 
 
 def stats_from_columns(columns: Mapping[str, Any]) -> TableStats:
@@ -92,7 +107,16 @@ def stats_from_columns(columns: Mapping[str, Any]) -> TableStats:
     rows = len(next(iter(columns.values()))) if columns else 0
     bpr = float(sum(np.asarray(v).dtype.itemsize for v in columns.values())) or 8.0
     ndv = {k: int(np.unique(np.asarray(v)).size) for k, v in columns.items()}
-    return TableStats.make(rows, bpr, ndv)
+    domains = {}
+    for k, v in columns.items():
+        a = np.asarray(v)
+        if rows == 0:
+            continue
+        if a.dtype == np.bool_:
+            domains[k] = (0, 1)
+        elif np.issubdtype(a.dtype, np.integer):
+            domains[k] = (int(a.min()), int(a.max()))
+    return TableStats.make(rows, bpr, ndv, domains)
 
 
 # ---------------------------------------------------------------------------
@@ -111,6 +135,9 @@ class RegStats:
     rows: float
     bytes_per_row: float = 8.0
     ndv: Tuple[Tuple[str, float], ...] = ()
+    #: per-column integral value bounds, carried through rewrites so the
+    #: lowering can plan dense-bucket operators on derived registers
+    domains: Tuple[Tuple[str, Tuple[int, int]], ...] = ()
 
     @property
     def bytes(self) -> float:
@@ -121,6 +148,12 @@ class RegStats:
             if name == column:
                 return n
         return default
+
+    def domain_of(self, column: str) -> Optional[Tuple[int, int]]:
+        for name, d in self.domains:
+            if name == column:
+                return d
+        return None
 
     def scaled(self, factor: float) -> "RegStats":
         rows = max(self.rows * factor, 1.0)
@@ -205,7 +238,8 @@ def _scan_stats(table: str, reg: Register, stats: Optional[Statistics]) -> RegSt
         cap = reg.type.attr("max_count") if is_coll(reg.type) else None
         return RegStats(rows=float(cap or 1024), bytes_per_row=_bpr_of(reg))
     return RegStats(rows=float(ts.rows), bytes_per_row=float(ts.bytes_per_row),
-                    ndv=tuple((k, float(v)) for k, v in ts.ndv))
+                    ndv=tuple((k, float(v)) for k, v in ts.ndv),
+                    domains=tuple(ts.domains))
 
 
 def _propagate_ins(ins, args, stats, env: StatsEnv, program: Program):
@@ -218,26 +252,41 @@ def _propagate_ins(ins, args, stats, env: StatsEnv, program: Program):
     if op in ("rel.Select", "vec.MaskSelect"):
         return [first.scaled(DEFAULT_SELECTIVITY)]
 
-    if op in ("rel.Proj", "rel.ExProj", "vec.ProjVec", "vec.ExProjVec",
-              "vec.SortByKey", "rel.OrderBy", "vec.Compact"):
+    if op in ("rel.Proj", "vec.ProjVec", "vec.SortByKey", "rel.OrderBy",
+              "vec.Compact"):
         return [replace(first.scaled(1.0), bytes_per_row=_bpr_of(ins.outputs[0]))]
+
+    if op in ("rel.ExProj", "vec.ExProjVec"):
+        # computed columns invalidate their NDV/domain estimates: keep them
+        # only where the expression is the identity Col — a stale domain
+        # would make a downstream dense-bucket plan silently merge groups
+        from ..core.expr import Col
+        identity = {n for n, e in tuple(ins.param("exprs") or ())
+                    if isinstance(e, Col) and e.name == n}
+        return [replace(first.scaled(1.0), bytes_per_row=_bpr_of(ins.outputs[0]),
+                        ndv=tuple((k, v) for k, v in first.ndv if k in identity),
+                        domains=tuple((k, d) for k, d in first.domains
+                                      if k in identity))]
 
     if op in ("rel.Aggr", "vec.AggrVec", "vec.FusedSelectAgg",
               "vec.FinalizeSingle", "rel.CombinePartials"):
         return [RegStats(rows=1.0, bytes_per_row=_bpr_of(ins.outputs[0]))]
 
-    if op in ("rel.GroupByAggr", "vec.GroupAggSorted"):
+    if op in ("rel.GroupByAggr", "vec.GroupAggSorted", "vec.GroupAggDirect"):
         keys = tuple(ins.param("keys") or ())
         cap = ins.param("max_groups")
         groups = first.group_rows(keys, int(cap) if cap else None)
         ndv = tuple((k, min(first.ndv_of(k) or groups, groups)) for k in keys)
+        domains = tuple((k, d) for k in keys
+                        for d in (first.domain_of(k),) if d is not None)
         return [RegStats(rows=groups, bytes_per_row=_bpr_of(ins.outputs[0]),
-                         ndv=ndv)]
+                         ndv=ndv, domains=domains)]
 
     if op in ("rel.Join", "vec.MergeJoinSorted"):
         left = args[0]
         out = replace(left.scaled(1.0), bytes_per_row=_bpr_of(ins.outputs[0]),
-                      ndv=tuple(left.ndv) + tuple(args[1].ndv))
+                      ndv=tuple(left.ndv) + tuple(args[1].ndv),
+                      domains=tuple(left.domains) + tuple(args[1].domains))
         return [out]
 
     if op in ("rel.Limit", "vec.LimitVec", "vec.TopKVec"):

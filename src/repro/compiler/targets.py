@@ -27,6 +27,7 @@ from ..core.passes import (
     CommonSubexpressionElimination,
     DeadCodeElimination,
     FuseSelectAgg,
+    FuseSelectGroupAgg,
     LowerToMesh,
     Parallelize,
     PushCombineIntoMesh,
@@ -38,7 +39,7 @@ __all__ = [
     "CompileOptions", "Stage", "Choice", "Target",
     "register_target", "get_target", "available_targets",
     "CANONICALIZE", "PARALLELIZE", "LOWER_REL_TO_VEC", "FUSE", "LOWER_TO_MESH",
-    "FUSE_CHOICE", "GROUPED_RECOMBINE",
+    "FUSE_CHOICE", "GROUPED_RECOMBINE", "GROUPBY_CHOICE",
 ]
 
 
@@ -131,7 +132,7 @@ def _lower_rel_to_vec(opts: CompileOptions) -> Sequence[Any]:
 
 def _fuse(opts: CompileOptions) -> Sequence[Any]:
     if opts.fuse:
-        return [FuseSelectAgg(), DeadCodeElimination()]
+        return [FuseSelectAgg(), FuseSelectGroupAgg(), DeadCodeElimination()]
     return []
 
 
@@ -182,6 +183,26 @@ class Choice:
         raise KeyError(
             f"choice {self.name!r} has no variant {label!r}; "
             f"known: {[l for l, _ in self.variants]}")
+
+
+def _lower_rel_to_vec_direct(opts: CompileOptions) -> Sequence[Any]:
+    return [LowerRelToVec(opts.catalog if opts.catalog is not None else Catalog(),
+                          groupby="direct")]
+
+
+#: grouped aggregation tier: SortByKey + GroupAggSorted (O(n log n), always
+#: valid — the plain LOWER_REL_TO_VEC stage) vs the sort-free dense-bucket
+#: GroupAggDirect (O(n), needs catalog key-domain bounds).  The first Choice
+#: whose variants have asymptotically different cost — NDV/domain size
+#: decides, like gather-vs-exchange.
+GROUPBY_CHOICE = Choice(
+    name="groupby",
+    variants=(("sorted", LOWER_REL_TO_VEC),
+              ("direct", Stage("lower-rel-to-vec", _lower_rel_to_vec_direct))),
+    default="sorted",
+    available=lambda opts: (("sorted", "direct") if opts.stats() is not None
+                            else ("sorted",)),
+)
 
 
 _NO_FUSE = Stage("no-fuse", lambda opts: [])
@@ -305,7 +326,7 @@ register_target(Target(
 register_target(Target(
     name="local",
     flavors=("vec", "cf", "rel", "df", "la", "tz"),
-    lowering_path=(CANONICALIZE, PARALLELIZE, LOWER_REL_TO_VEC, FUSE_CHOICE),
+    lowering_path=(CANONICALIZE, PARALLELIZE, GROUPBY_CHOICE, FUSE_CHOICE),
     make_backend=_make_local,
     source_kind="vec",
 ))
@@ -313,7 +334,7 @@ register_target(Target(
 register_target(Target(
     name="spmd",
     flavors=("vec", "cf", "rel", "la", "mesh"),
-    lowering_path=(CANONICALIZE, PARALLELIZE, LOWER_REL_TO_VEC, FUSE_CHOICE,
+    lowering_path=(CANONICALIZE, PARALLELIZE, GROUPBY_CHOICE, FUSE_CHOICE,
                    LOWER_TO_MESH, GROUPED_RECOMBINE),
     make_backend=_make_spmd,
     source_kind="vec",
@@ -326,7 +347,7 @@ register_target(Target(
 register_target(Target(
     name="multipod",
     flavors=("vec", "cf", "rel", "la", "mesh"),
-    lowering_path=(CANONICALIZE, PARALLELIZE, LOWER_REL_TO_VEC, FUSE_CHOICE,
+    lowering_path=(CANONICALIZE, PARALLELIZE, GROUPBY_CHOICE, FUSE_CHOICE,
                    LOWER_TO_MESH, GROUPED_RECOMBINE),
     make_backend=_make_spmd,
     source_kind="vec",

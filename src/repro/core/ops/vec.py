@@ -178,6 +178,40 @@ def _groupagg_sorted(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequ
     return [Vec(TupleType(fields), int(params["max_groups"]))]
 
 
+@op("vec.GroupAggDirect", aggregation={"kind": "grouped"})
+def _groupagg_direct(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """GroupAggDirect(keys, aggs, max_groups, key_domains, num_buckets[, pred])
+    (Vec⟨T⟩) → Vec⟨keys+aggs⟩.
+
+    The sort-FREE grouped aggregation: when catalog statistics bound the
+    composite key domain (``key_domains`` = per-key (lo, hi)), each row's
+    group is a static function of its key values, so the backend
+    segment-reduces straight into ``num_buckets`` dense buckets — O(n), no
+    sort, no gather — and compacts non-empty buckets to ``max_groups``.
+    The optional ``pred`` is a fused MaskSelect predicate (lowered to the
+    ``grouped_select_agg`` Pallas kernel under ``use_kernels``).
+    """
+    v = _vec(ins[0])
+    keys: Tuple[str, ...] = tuple(params["keys"])
+    key_domains = tuple(params["key_domains"])
+    if len(key_domains) != len(keys):
+        raise TypeError("GroupAggDirect: key_domains must match keys")
+    n_buckets = 1
+    for lo, hi in key_domains:
+        n_buckets *= int(hi) - int(lo) + 1
+    if int(params["num_buckets"]) != n_buckets:
+        raise TypeError(
+            f"GroupAggDirect: num_buckets {params['num_buckets']} does not "
+            f"match key domain product {n_buckets}")
+    pred = params.get("pred")
+    if pred is not None and pred.infer(v.schema).domain != "bool":
+        raise TypeError("GroupAggDirect predicate not boolean")
+    aggs: Tuple[AggSpec, ...] = tuple(params["aggs"])
+    fields = tuple((k, v.schema.field(k)) for k in keys)
+    fields += tuple((a.name, a.result_atom(v.schema)) for a in aggs)
+    return [Vec(TupleType(fields), int(params["max_groups"]))]
+
+
 @op("vec.BuildHTable")
 def _buildhtable(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
     """BuildHTable()(Vec⟨T⟩) → Single⟨HTab⟨T⟩⟩ (keys = params['keys'])."""

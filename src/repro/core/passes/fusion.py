@@ -6,6 +6,11 @@ collapse into single instructions that the backend JIT-compiles as one unit
 
 * ``FuseSelectAgg`` — ``MaskSelect → [ExProjVec] → AggrVec`` becomes
   ``vec.FusedSelectAgg`` (the single-pass shape JITQ compiles TPC-H Q6 into).
+* ``FuseSelectGroupAgg`` — ``MaskSelect → [ExProjVec] → GroupAggDirect``
+  folds the predicate (and projected agg expressions) into the dense-bucket
+  grouped aggregation, the TPC-H Q1 single-pass shape; under
+  ``use_kernels`` the whole pipeline is one ``grouped_select_agg`` Pallas
+  kernel invocation.
 * ``FuseKMeansStep`` — ``CDist2 → ArgMinRow → SegSum + SegCount`` becomes
   ``la.KMeansStep`` (the "run-based aggregation" plan analysis the paper
   credits for matching hand-written C++ k-means).
@@ -15,7 +20,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional
 
-from ..expr import AggSpec, Const, Expr, col, substitute
+from ..expr import AggSpec, Col, Const, Expr, col, substitute
 from ..program import Instruction, Program
 from ..types import BOOL
 from .rewriter import ProgramRule
@@ -64,6 +69,67 @@ class FuseSelectAgg(ProgramRule):
             )
             dead = {id(c) for c in chain} | {id(y)}
             new_body = [fused if ins is y else ins for ins in program.body if id(ins) not in dead or ins is y]
+            return program.with_body(new_body)
+        return None
+
+
+class FuseSelectGroupAgg(ProgramRule):
+    """Fold MaskSelect → [ExProjVec] → GroupAggDirect into one instruction.
+
+    MaskSelect only narrows the validity mask, so its predicate moves
+    verbatim into GroupAggDirect's fused ``pred``; an intervening ExProjVec
+    is absorbed by substituting its expressions into the agg specs, but only
+    when every group key passes through as an identity column (a rename
+    would change the output schema).  The sorted tier cannot fuse this way —
+    the sort between select and aggregate forces materialization — which is
+    part of why the direct tier wins on selective low-NDV queries.
+    """
+
+    name = "fuse-select-groupagg"
+
+    def run(self, program: Program) -> Optional[Program]:
+        producers = program.producers()
+
+        for y in program.body:
+            if y.opcode != "vec.GroupAggDirect":
+                continue
+            keys = tuple(y.param("keys"))
+            aggs = tuple(y.param("aggs"))
+            chain: List[Instruction] = []
+            exprs_map: Dict[str, Expr] = {}
+            pred: Optional[Expr] = y.param("pred")
+
+            cur = producers.get(y.inputs[0].name)
+            if (cur is not None and cur.opcode == "vec.ExProjVec"
+                    and program.uses(cur.outputs[0]) == 1):
+                exprs = {n: e for n, e in cur.param("exprs")}
+                if all(isinstance(exprs.get(k), Col) and exprs[k].name == k
+                       for k in keys):
+                    exprs_map = exprs
+                    if pred is not None:  # re-express over the base schema
+                        pred = substitute(pred, exprs_map)
+                    chain.append(cur)
+                    cur = producers.get(cur.inputs[0].name)
+            if (cur is not None and cur.opcode == "vec.MaskSelect"
+                    and program.uses(cur.outputs[0]) == 1):
+                sel = cur.param("pred")  # already over the base schema
+                pred = sel if pred is None else (pred & sel)
+                chain.append(cur)
+
+            if not chain:
+                continue
+            base = chain[-1].inputs[0]
+            fused_aggs = tuple(
+                AggSpec(a.fn, substitute(a.expr, exprs_map), a.name)
+                for a in aggs) if exprs_map else aggs
+            params = dict(y.params)
+            params["aggs"] = fused_aggs
+            params["pred"] = pred
+            fused = Instruction("vec.GroupAggDirect", (base,), y.outputs,
+                                tuple(params.items()))
+            dead = {id(c) for c in chain}
+            new_body = [fused if ins is y else ins
+                        for ins in program.body if id(ins) not in dead]
             return program.with_body(new_body)
         return None
 

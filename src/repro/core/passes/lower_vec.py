@@ -7,9 +7,16 @@ through a Builder so every register is re-typed by the typing rules.
 
 Catalog decisions made here (the "physical optimizer"):
   * table scans get static capacities from the catalog;
-  * GroupByAggr → SortByKey + GroupAggSorted(max_groups);
+  * GroupByAggr → SortByKey + GroupAggSorted(max_groups), or — under
+    ``groupby="direct"``, when propagated catalog statistics bound the
+    composite key domain — the sort-FREE ``vec.GroupAggDirect`` (dense
+    bucket segment reduction, O(n)); the compilation driver exposes the
+    two tiers as the ``groupby: sorted | direct`` strategy Choice and the
+    cost model picks (NDV/domain decides, like gather-vs-exchange);
   * Join → SortByKey(build side) + MergeJoinSorted (sort-based PK-FK join —
     the TPU-native rewrite of BuildHTable/ProbeHTable, DESIGN.md §2);
+    multi-column join keys get catalog-derived ``key_domains`` so the
+    composite packing is collision-checked instead of 16-bit truncated;
   * higher-order instructions are reconstructed recursively with re-derived
     chunk types.
 """
@@ -17,10 +24,15 @@ Catalog decisions made here (the "physical optimizer"):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Mapping, Optional, Sequence
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from ..program import Builder, Instruction, Program, Register
 from ..types import ItemType
+
+#: dense-bucket plans beyond this domain size are never emitted — the
+#: bucket table itself would dominate (the cost model would reject them
+#: anyway; this is the hard memory guard)
+MAX_DIRECT_BUCKETS = 1 << 20
 
 
 @dataclass
@@ -45,15 +57,48 @@ class Catalog:
 
 
 class LowerRelToVec:
-    """Not a fixpoint rule: a single whole-program reconstruction."""
+    """Not a fixpoint rule: a single whole-program reconstruction.
+
+    ``groupby`` selects the physical grouped-aggregation tier: ``"sorted"``
+    (SortByKey + GroupAggSorted, always valid) or ``"direct"``
+    (vec.GroupAggDirect dense buckets — used per instruction whenever the
+    propagated statistics bound the key domain, falling back to sorted
+    otherwise).
+    """
 
     name = "lower-rel-to-vec"
 
-    def __init__(self, catalog: Catalog) -> None:
+    def __init__(self, catalog: Catalog, groupby: str = "sorted") -> None:
+        if groupby not in ("sorted", "direct"):
+            raise ValueError(f"unknown groupby tier {groupby!r}")
         self.catalog = catalog
+        self.groupby = groupby
+        self._env: Any = None  # StatsEnv over the SOURCE program tree
 
     def apply(self, program: Program, input_types: Optional[Sequence[ItemType]] = None) -> Program:
+        if self.catalog.stats is not None:
+            # propagate catalog statistics over the source tree once: the
+            # per-register domain bounds are what make dense-bucket plans
+            # (GroupAggDirect, packed join keys) derivable mid-program
+            from ...compiler.stats import propagate
+            self._env = propagate(program, self.catalog.stats)
         return self._lower(program, list(input_types or []) or None)
+
+    # ------------------------------------------------------------------
+    def _reg_domains(self, program: Program, reg: Register,
+                     columns: Sequence[str]) -> Optional[Tuple[Tuple[int, int], ...]]:
+        """Static (lo, hi) per column of a source-program register, if the
+        propagated statistics bound every one of them."""
+        if self._env is None:
+            return None
+        rs = self._env.get(program, reg)
+        out = []
+        for c in columns:
+            d = rs.domain_of(c)
+            if d is None:
+                return None
+            out.append((int(d[0]), int(d[1])))
+        return tuple(out)
 
     # ------------------------------------------------------------------
     def _lower(self, program: Program, new_input_types: Optional[List[ItemType]]) -> Program:
@@ -65,7 +110,7 @@ class LowerRelToVec:
 
         for ins in program.body:
             new_ins = [regmap[r.name] for r in ins.inputs]
-            outs = self._lower_instruction(b, ins, new_ins)
+            outs = self._lower_instruction(b, ins, new_ins, program)
             if len(outs) != len(ins.outputs):
                 raise AssertionError(f"lowering {ins.opcode}: arity changed")
             for old, new in zip(ins.outputs, outs):
@@ -75,7 +120,8 @@ class LowerRelToVec:
 
     # ------------------------------------------------------------------
     def _lower_instruction(self, b: Builder, ins: Instruction,
-                           inputs: List[Register]) -> Sequence[Register]:
+                           inputs: List[Register], src_program: Program,
+                           ) -> Sequence[Register]:
         params = dict(ins.params)
         op = ins.opcode
 
@@ -98,21 +144,44 @@ class LowerRelToVec:
         if op == "rel.GroupByAggr":
             keys = tuple(params["keys"])
             mg = int(params.get("max_groups") or self.catalog.default_max_groups)
+            aggs = tuple(params["aggs"])
+            if self.groupby == "direct":
+                domains = self._reg_domains(src_program, ins.inputs[0], keys)
+                if domains is not None:
+                    n_buckets = 1
+                    for lo, hi in domains:
+                        n_buckets *= hi - lo + 1
+                    if 0 < n_buckets <= MAX_DIRECT_BUCKETS:
+                        return b.emit("vec.GroupAggDirect", inputs, {
+                            "keys": keys, "aggs": aggs, "max_groups": mg,
+                            "key_domains": domains, "num_buckets": n_buckets,
+                        })
+                # unbounded / oversized key domain: the sorted tier is the
+                # always-valid fallback
             s = b.emit1("vec.SortByKey", inputs, {"keys": keys})
             return b.emit("vec.GroupAggSorted", [s], {
-                "keys": keys, "aggs": tuple(params["aggs"]), "max_groups": mg,
+                "keys": keys, "aggs": aggs, "max_groups": mg,
             })
         if op == "rel.Join":
             left, right = inputs
+            left_on = tuple(params["left_on"])
             right_on = tuple(params["right_on"])
             left_cap = left.type.attr("max_count")
             out_cap = int(left_cap * self.catalog.join_selectivity)
+            join_params: Dict[str, Any] = {
+                "left_on": left_on, "right_on": right_on, "max_count": out_cap,
+            }
+            if len(left_on) > 1:
+                # catalog bounds let the composite key pack without 16-bit
+                # truncation (joint bounds over both sides)
+                ld = self._reg_domains(src_program, ins.inputs[0], left_on)
+                rd = self._reg_domains(src_program, ins.inputs[1], right_on)
+                if ld is not None and rd is not None:
+                    join_params["key_domains"] = tuple(
+                        (min(a[0], c[0]), max(a[1], c[1]))
+                        for a, c in zip(ld, rd))
             rs = b.emit1("vec.SortByKey", [right], {"keys": right_on})
-            return b.emit("vec.MergeJoinSorted", [left, rs], {
-                "left_on": tuple(params["left_on"]),
-                "right_on": right_on,
-                "max_count": out_cap,
-            })
+            return b.emit("vec.MergeJoinSorted", [left, rs], join_params)
         if op == "rel.OrderBy":
             keys = tuple(params["keys"])
             asc = tuple(params.get("ascending") or (True,) * len(keys))

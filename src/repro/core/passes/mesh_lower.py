@@ -112,8 +112,9 @@ class PushCombineIntoMesh(ProgramRule):
 
 
 class PushGroupedCombineIntoMesh(ProgramRule):
-    """Merge → SortByKey → GroupAggSorted after a MeshExecute becomes
-    ExchangeByKey + per-shard sort/aggregate inside the mesh program.
+    """A grouped recombine after a MeshExecute — ``Merge → SortByKey →
+    GroupAggSorted`` or the sort-free ``Merge → GroupAggDirect`` — becomes
+    ExchangeByKey + per-shard aggregation inside the mesh program.
 
     Correctness relies only on colocation: partitioning by the first group
     key sends every row of a group to the same device, so the per-shard
@@ -128,17 +129,25 @@ class PushGroupedCombineIntoMesh(ProgramRule):
     def run(self, program: Program) -> Optional[Program]:
         producers = program.producers()
         for g in program.body:
-            if g.opcode != "vec.GroupAggSorted":
+            if g.opcode not in ("vec.GroupAggSorted", "vec.GroupAggDirect"):
                 continue
-            sort = producers.get(g.inputs[0].name)
-            if (sort is None or sort.opcode != "vec.SortByKey"
-                    or program.uses(g.inputs[0]) != 1):
-                continue
-            if tuple(sort.param("keys")) != tuple(g.param("keys")):
-                continue
-            merge = producers.get(sort.inputs[0].name)
+            sort = None
+            if g.opcode == "vec.GroupAggSorted":
+                sort = producers.get(g.inputs[0].name)
+                if (sort is None or sort.opcode != "vec.SortByKey"
+                        or program.uses(g.inputs[0]) != 1):
+                    continue
+                if tuple(sort.param("keys")) != tuple(g.param("keys")):
+                    continue
+                merge = producers.get(sort.inputs[0].name)
+                merge_out = sort.inputs[0]
+            else:
+                # the direct (dense-bucket) tier consumes the Merge directly:
+                # there is no sort to elide, only the gather to replace
+                merge = producers.get(g.inputs[0].name)
+                merge_out = g.inputs[0]
             if (merge is None or merge.opcode != "cf.Merge"
-                    or program.uses(sort.inputs[0]) != 1):
+                    or program.uses(merge_out) != 1):
                 continue
             src = merge.inputs[0]
             me = producers.get(src.name)
@@ -152,7 +161,6 @@ class PushGroupedCombineIntoMesh(ProgramRule):
             axis = me.param("axis")
             n = int(src.type.attr("n"))
             keys = tuple(g.param("keys"))
-            aggs = tuple(g.param("aggs"))
             max_groups = int(g.param("max_groups"))
 
             # --- extend the nested program: exchange + shard-local re-agg --
@@ -161,22 +169,34 @@ class PushGroupedCombineIntoMesh(ProgramRule):
             (ex_t,) = infer_output_types("mesh.ExchangeByKey", ex_params,
                                          [res.type])
             ex = Register(res.name + "_ex", ex_t)
-            sort_params = {"keys": keys}
-            (s_t,) = infer_output_types("vec.SortByKey", sort_params, [ex_t])
-            srt = Register(res.name + "_st", s_t)
-            agg_params = {"keys": keys, "aggs": aggs, "max_groups": max_groups}
-            (a_t,) = infer_output_types("vec.GroupAggSorted", agg_params, [s_t])
-            agg = Register(res.name + "_ag", a_t)
-            new_inner = Program(
-                name=inner.name, inputs=inner.inputs,
-                body=inner.body + (
+            if g.opcode == "vec.GroupAggSorted":
+                sort_params = {"keys": keys}
+                (s_t,) = infer_output_types("vec.SortByKey", sort_params, [ex_t])
+                srt = Register(res.name + "_st", s_t)
+                agg_params = dict(g.params)
+                (a_t,) = infer_output_types("vec.GroupAggSorted", agg_params, [s_t])
+                agg = Register(res.name + "_ag", a_t)
+                tail = (
                     Instruction("mesh.ExchangeByKey", (res,), (ex,),
                                 tuple(ex_params.items())),
                     Instruction("vec.SortByKey", (ex,), (srt,),
                                 tuple(sort_params.items())),
                     Instruction("vec.GroupAggSorted", (srt,), (agg,),
                                 tuple(agg_params.items())),
-                ),
+                )
+            else:
+                agg_params = dict(g.params)
+                (a_t,) = infer_output_types("vec.GroupAggDirect", agg_params, [ex_t])
+                agg = Register(res.name + "_ag", a_t)
+                tail = (
+                    Instruction("mesh.ExchangeByKey", (res,), (ex,),
+                                tuple(ex_params.items())),
+                    Instruction("vec.GroupAggDirect", (ex,), (agg,),
+                                tuple(agg_params.items())),
+                )
+            new_inner = Program(
+                name=inner.name, inputs=inner.inputs,
+                body=inner.body + tail,
                 results=tuple(agg if i == idx else r
                               for i, r in enumerate(inner.results)),
             )

@@ -172,10 +172,11 @@ class Frame:
     def collect(self, parallel: Optional[int] = None, use_kernels: bool = False,
                 backend: Optional[Any] = None,
                 target: str = "local",
-                optimize: Optional[str] = None) -> Dict[str, np.ndarray]:
+                optimize: Optional[str] = None,
+                strategy: Any = None) -> Dict[str, np.ndarray]:
         return self._ctx.execute(self, parallel=parallel, use_kernels=use_kernels,
                                  backend=backend, target=target,
-                                 optimize=optimize)
+                                 optimize=optimize, strategy=strategy)
 
 
 class GroupBy:
@@ -270,7 +271,10 @@ class Context:
             frame.program(),
             target=target,
             parallel=parallel,
-            catalog=self.catalog(with_stats=optimize == "cost"),
+            # statistics feed both the costed search and forced physical
+            # strategies (a forced groupby=direct needs key-domain bounds)
+            catalog=self.catalog(
+                with_stats=optimize is not None or strategy is not None),
             use_kernels=use_kernels,
             fuse=fuse,
             backend=backend,
@@ -290,12 +294,13 @@ class Context:
     def execute(self, frame: Frame, parallel: Optional[int] = None,
                 use_kernels: bool = False, backend: Any = None,
                 target: str = "local",
-                optimize: Optional[str] = None) -> Dict[str, np.ndarray]:
+                optimize: Optional[str] = None,
+                strategy: Any = None) -> Dict[str, np.ndarray]:
         from ..compiler import get_target
 
         compiled = self.compile(frame, parallel=parallel, use_kernels=use_kernels,
                                 backend=backend, target=target,
-                                optimize=optimize)
+                                optimize=optimize, strategy=strategy)
         src = (self.tables if get_target(target).source_kind == "numpy"
                else self.sources())
         (out,) = compiled(src)

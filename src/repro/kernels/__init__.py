@@ -6,8 +6,10 @@ pure-jnp oracle.  On this CPU container kernels run with ``interpret=True``;
 on TPU the same BlockSpecs bind to real VMEM tiles.
 
 Kernels:
-  * fused_select_agg — single-pass select+project+aggregate (TPC-H Q6 pipeline)
-  * segsum           — segment reduction as one-hot MXU matmul (GroupBy)
+  * fused_select_agg   — single-pass select+project+aggregate (TPC-H Q6 pipeline)
+  * grouped_select_agg — fused select + dense-bucket grouped aggregation
+                         (TPC-H Q1 pipeline: vec.GroupAggDirect under kernels)
+  * segsum             — segment reduction as one-hot MXU matmul (GroupBy)
   * kmeans_step      — fused assign+accumulate k-means iteration
   * flash_attention  — causal/windowed GQA online-softmax attention
 """

@@ -24,6 +24,7 @@ from ..core.expr import AggSpec, Expr
 from . import ref
 from .flash_attention import flash_attention_p
 from .fused_select_agg import LANES, fused_select_agg_p
+from .grouped_select_agg import grouped_select_agg_p
 from .kmeans_step import kmeans_step_p
 from .segsum import segsum_p
 
@@ -61,6 +62,67 @@ def fused_select_agg(table, pred: Expr, aggs: Sequence[AggSpec], *,
     # empty-selection min/max: map the kernel's finite sentinels back to ±inf
     out = jnp.where(out >= 3.0e38, jnp.inf, jnp.where(out <= -3.0e38, -jnp.inf, out))
     return {a.name: out[i] for i, a in enumerate(aggs)}
+
+
+def grouped_select_agg(table, pred: Optional[Expr], keys: Sequence[str],
+                       aggs: Sequence[AggSpec],
+                       max_groups: int,
+                       key_domains: Sequence[Tuple[int, int]],
+                       num_buckets: int, *,
+                       block_rows: int = 256, interpret: bool = True):
+    """VecTable → Vec⟨keys+aggs⟩ via the fused Pallas kernel.
+
+    One blockwise pass: fused predicate + dense-bucket accumulation
+    (``vec.GroupAggDirect`` under ``use_kernels``).  The tiny per-bucket
+    epilogue (cross-lane reduce, key decode, compaction to ``max_groups``)
+    runs outside the kernel.
+    """
+    from ..relational import runtime as rt
+
+    agg_fields = {f for a in aggs for f in a.expr.fields()}
+    pred_fields = set(pred.fields()) if pred is not None else set()
+    names = tuple(sorted(pred_fields | agg_fields | set(keys)))
+    cap = table.capacity
+    rows = -(-cap // LANES)  # ceil
+    rows = -(-rows // block_rows) * block_rows
+    total = rows * LANES
+
+    def to_lanes(arr):
+        return _pad_rows(arr, total).reshape(rows, LANES)
+
+    cols = tuple(to_lanes(table.cols[n].astype(jnp.float32)
+                          if jnp.issubdtype(table.cols[n].dtype, jnp.floating)
+                          else table.cols[n]) for n in names)
+    valid = to_lanes(table.valid)
+    key_specs = tuple((k, int(lo), int(hi) - int(lo) + 1)
+                      for k, (lo, hi) in zip(keys, key_domains))
+    lane_accs = grouped_select_agg_p(
+        cols, valid, pred=pred, aggs=tuple(aggs), names=names,
+        key_specs=key_specs, num_buckets=num_buckets,
+        block_rows=block_rows, interpret=interpret)
+
+    counts = jnp.sum(lane_accs[0], axis=1)[:num_buckets]
+    out_cols = rt.decode_bucket_keys(keys, key_domains,
+                                     [table.cols[k].dtype for k in keys],
+                                     num_buckets)
+    for j, a in enumerate(aggs):
+        lane = lane_accs[j + 1]
+        if a.fn in ("sum", "count"):
+            red = jnp.sum(lane, axis=1)
+        elif a.fn == "min":
+            red = jnp.min(lane, axis=1)
+        else:
+            red = jnp.max(lane, axis=1)
+        red = red[:num_buckets]
+        if a.fn == "count":
+            red = red.astype(jnp.int32)
+        else:
+            # empty-bucket min/max: finite kernel sentinels back to ±inf
+            red = jnp.where(red >= 3.0e38, jnp.inf,
+                            jnp.where(red <= -3.0e38, -jnp.inf, red))
+        out_cols[a.name] = red
+    buckets = rt.VecTable(out_cols, counts > 0)
+    return rt.compact(buckets, max_groups)
 
 
 def segsum(data: jax.Array, seg_ids: jax.Array, num_segments: int, *,

@@ -148,26 +148,90 @@ def sort_by_key(t: VecTable, keys: Sequence[str], ascending: Optional[Sequence[b
 
 
 def compact(t: VecTable, max_count: Optional[int] = None) -> VecTable:
-    """Densify valid rows to the front (argsort on ~valid, stable)."""
-    perm = jnp.argsort(~t.valid, stable=True)
-    cols = {k: v[perm] for k, v in t.cols.items()}
-    valid = t.valid[perm]
-    if max_count is not None and max_count != t.capacity:
-        cols = {k: v[:max_count] for k, v in cols.items()}
-        valid = valid[:max_count]
+    """Densify valid rows to the front — O(n) prefix-sum scatter.
+
+    Position of each valid row is its prefix count of valid rows; rows
+    beyond ``max_count`` (and all invalid rows) scatter out of bounds and
+    are dropped.  Replaces the old argsort(~valid) shuffle (O(n log n)).
+    """
+    out_cap = int(max_count) if max_count is not None else t.capacity
+    valid_i = t.valid.astype(jnp.int32)
+    pos = jnp.cumsum(valid_i) - 1
+    idx = jnp.where(t.valid, pos, out_cap)  # invalid rows → out of bounds
+    n = jnp.minimum(jnp.sum(valid_i), out_cap)
+
+    def scatter(col: jax.Array) -> jax.Array:
+        out = jnp.zeros((out_cap,) + col.shape[1:], col.dtype)
+        return out.at[idx].set(col, mode="drop")
+
+    cols = {k: scatter(v) for k, v in t.cols.items()}
+    valid = jnp.arange(out_cap) < n
     return VecTable(cols, valid)
 
 
-def _composite_key(t: VecTable, keys: Sequence[str]) -> jax.Array:
-    """Combine (small-domain) key columns into one i64 for segmenting."""
-    acc = None
+#: composite-key packings with more buckets than this raise instead of
+#: silently colliding in the 32-bit accumulator
+_PACK_LIMIT = 1 << 31
+
+
+def _composite_key(t: VecTable, keys: Sequence[str],
+                   key_domains: Optional[Sequence[Tuple[int, int]]] = None,
+                   lows: Optional[Sequence[jax.Array]] = None,
+                   sizes: Optional[Sequence[jax.Array]] = None) -> jax.Array:
+    """Pack key columns into one i32, preserving lexicographic order.
+
+    Packing needs per-column value bounds.  Three sources, in order:
+    static ``key_domains`` from the catalog (checked against the 32-bit
+    budget — overpacking raises instead of colliding); dynamic
+    ``lows``/``sizes`` traced from the data (collision-free whenever the
+    actual domain product fits 32 bits); neither → single column only.
+    """
+    if key_domains is not None:
+        n_buckets = 1
+        for lo, hi in key_domains:
+            n_buckets *= int(hi) - int(lo) + 1
+        if n_buckets > _PACK_LIMIT:
+            raise ValueError(
+                f"composite key domain for {tuple(keys)} has {n_buckets} "
+                f"buckets and cannot be packed into a 32-bit accumulator; "
+                "reduce the key domain or use a single integer key column")
+        acc = jnp.zeros((t.capacity,), jnp.int32)
+        for k, (lo, hi) in zip(keys, key_domains):
+            size = int(hi) - int(lo) + 1
+            arr = _int_key(t.cols[k])
+            arr = jnp.clip(arr - jnp.int32(lo), 0, size - 1)
+            acc = acc * jnp.int32(size) + arr
+        return acc
+    if lows is not None and sizes is not None:
+        acc = jnp.zeros((t.capacity,), jnp.int32)
+        for k, lo, size in zip(keys, lows, sizes):
+            arr = _int_key(t.cols[k])
+            acc = acc * size.astype(jnp.int32) + (arr - lo.astype(jnp.int32))
+        return acc
+    if len(keys) == 1:
+        return _int_key(t.cols[keys[0]])
+    raise ValueError(
+        f"cannot pack composite key {tuple(keys)} without per-column domain "
+        "bounds; provide catalog key domains (see Catalog.stats) or derive "
+        "dynamic bounds from the data")
+
+
+def _int_key(arr: jax.Array) -> jax.Array:
+    if jnp.issubdtype(arr.dtype, jnp.floating):
+        arr = arr.view(jnp.int32) if arr.dtype == jnp.float32 else arr.astype(jnp.int32)
+    return arr.astype(jnp.int32)
+
+
+def _key_change(t: VecTable, keys: Sequence[str]) -> jax.Array:
+    """Per-row "starts a new group" flags for a key-sorted block.
+
+    Per-column comparison against the previous row — collision-free for any
+    key dtype, domain, and column count (unlike composite-key packing)."""
+    change = jnp.zeros((t.capacity,), bool).at[0].set(True)
     for k in keys:
-        arr = t.cols[k]
-        if jnp.issubdtype(arr.dtype, jnp.floating):
-            arr = arr.view(jnp.int32) if arr.dtype == jnp.float32 else arr.astype(jnp.int32)
-        arr = arr.astype(jnp.int32)
-        acc = arr if acc is None else acc * jnp.int32(65536) + (arr & jnp.int32(0xFFFF))
-    return acc
+        col = t.cols[k]
+        change = change | (col != jnp.concatenate([col[:1], col[:-1]]))
+    return change & t.valid
 
 
 def group_agg_sorted(t: VecTable, keys: Sequence[str], aggs: Sequence[AggSpec],
@@ -178,9 +242,7 @@ def group_agg_sorted(t: VecTable, keys: Sequence[str], aggs: Sequence[AggSpec],
     key (invalid at the end), segment ids are the prefix count of key
     changes, and each agg is a masked ``jax.ops.segment_*``.
     """
-    ck = _composite_key(t, keys)
-    prev = jnp.concatenate([ck[:1] - 1, ck[:-1]])
-    change = (ck != prev) & t.valid
+    change = _key_change(t, keys)
     seg = jnp.cumsum(change.astype(jnp.int32)) - 1  # -1 before first valid group
     seg = jnp.where(t.valid, seg, max_groups)  # dump invalid rows
     seg = jnp.clip(seg, 0, max_groups)
@@ -191,41 +253,109 @@ def group_agg_sorted(t: VecTable, keys: Sequence[str], aggs: Sequence[AggSpec],
             jnp.where(t.valid, t.cols[k], jnp.zeros((), t.cols[k].dtype)),
             seg, num_segments=max_groups + 1)[:max_groups]
     for a in aggs:
-        if a.fn == "count":
-            arr = t.valid.astype(jnp.int32)
-            red = jax.ops.segment_sum(arr, seg, num_segments=max_groups + 1)[:max_groups]
-        else:
-            arr = evaluate(a.expr, t.cols, jnp)
-            if jnp.issubdtype(arr.dtype, jnp.integer):
-                arr = arr.astype(jnp.float32)
-            if a.fn == "sum":
-                red = jax.ops.segment_sum(jnp.where(t.valid, arr, 0), seg,
-                                          num_segments=max_groups + 1)[:max_groups]
-            elif a.fn == "min":
-                red = jax.ops.segment_min(jnp.where(t.valid, arr, _F32_INF), seg,
-                                          num_segments=max_groups + 1)[:max_groups]
-            elif a.fn == "max":
-                red = jax.ops.segment_max(jnp.where(t.valid, arr, -_F32_INF), seg,
-                                          num_segments=max_groups + 1)[:max_groups]
-            else:
-                raise ValueError(a.fn)
+        red = _segment_agg(a, t.cols, t.valid, seg, max_groups + 1)[:max_groups]
         out_cols[a.name] = red
     n_groups = jnp.sum(change.astype(jnp.int32))
     group_valid = jnp.arange(max_groups) < n_groups
     return VecTable(out_cols, group_valid)
 
 
+def _segment_agg(a: AggSpec, cols: Mapping[str, jax.Array], valid: jax.Array,
+                 seg: jax.Array, num_segments: int) -> jax.Array:
+    """One masked segment reduction (shared by the sorted and direct tiers)."""
+    if a.fn == "count":
+        return jax.ops.segment_sum(valid.astype(jnp.int32), seg,
+                                   num_segments=num_segments)
+    arr = evaluate(a.expr, cols, jnp)
+    if jnp.issubdtype(arr.dtype, jnp.integer) or jnp.issubdtype(arr.dtype, jnp.bool_):
+        arr = arr.astype(jnp.float32)
+    if a.fn == "sum":
+        return jax.ops.segment_sum(jnp.where(valid, arr, 0), seg,
+                                   num_segments=num_segments)
+    if a.fn == "min":
+        return jax.ops.segment_min(jnp.where(valid, arr, _F32_INF), seg,
+                                   num_segments=num_segments)
+    if a.fn == "max":
+        return jax.ops.segment_max(jnp.where(valid, arr, -_F32_INF), seg,
+                                   num_segments=num_segments)
+    raise ValueError(a.fn)
+
+
+def bucket_ids(t: VecTable, keys: Sequence[str],
+               key_domains: Sequence[Tuple[int, int]]) -> jax.Array:
+    """Dense bucket id per row: lexicographic rank in the static key domain."""
+    acc = jnp.zeros((t.capacity,), jnp.int32)
+    for k, (lo, hi) in zip(keys, key_domains):
+        size = int(hi) - int(lo) + 1
+        arr = jnp.clip(_int_key(t.cols[k]) - jnp.int32(lo), 0, size - 1)
+        acc = acc * jnp.int32(size) + arr
+    return acc
+
+
+def decode_bucket_keys(keys: Sequence[str], key_domains: Sequence[Tuple[int, int]],
+                       dtypes: Sequence[Any], num_buckets: int) -> Dict[str, jax.Array]:
+    """Key column values for each dense bucket id (inverse of bucket_ids)."""
+    b = jnp.arange(num_buckets, dtype=jnp.int32)
+    sizes = [int(hi) - int(lo) + 1 for lo, hi in key_domains]
+    out: Dict[str, jax.Array] = {}
+    stride = num_buckets
+    for k, (lo, _), size, dt in zip(keys, key_domains, sizes, dtypes):
+        stride //= size
+        vals = (b // stride) % size + jnp.int32(lo)
+        out[k] = vals.astype(dt)
+    return out
+
+
+def group_agg_direct(t: VecTable, keys: Sequence[str], aggs: Sequence[AggSpec],
+                     max_groups: int, key_domains: Sequence[Tuple[int, int]],
+                     num_buckets: int, pred: Optional[Expr] = None) -> VecTable:
+    """Grouped aggregation WITHOUT sorting: dense-bucket segment reduction.
+
+    When the catalog bounds the composite key domain, every row's group is a
+    static function of its key values — segment-reduce straight into
+    ``num_buckets`` dense buckets (O(n), no lexsort, no per-column gather),
+    then prefix-sum-compact the non-empty buckets to ``max_groups``.  Bucket
+    order is lexicographic key order, so the output matches
+    ``sort_by_key + group_agg_sorted`` row for row.  An optional fused
+    predicate narrows validity in the same pass (MaskSelect fusion).
+    """
+    valid = t.valid
+    if pred is not None:
+        valid = valid & evaluate(pred, t.cols, jnp)
+    bid = bucket_ids(t, keys, key_domains)
+    seg = jnp.where(valid, bid, num_buckets)  # dump invalid rows
+
+    counts = jax.ops.segment_sum(valid.astype(jnp.int32), seg,
+                                 num_segments=num_buckets + 1)[:num_buckets]
+    out_cols = decode_bucket_keys(keys, key_domains,
+                                  [t.cols[k].dtype for k in keys], num_buckets)
+    for a in aggs:
+        out_cols[a.name] = _segment_agg(a, t.cols, valid, seg,
+                                        num_buckets + 1)[:num_buckets]
+    buckets = VecTable(out_cols, counts > 0)
+    return compact(buckets, max_groups)
+
+
 def merge_join_sorted(left: VecTable, right: VecTable, left_on: Sequence[str],
-                      right_on: Sequence[str], max_count: int) -> VecTable:
+                      right_on: Sequence[str], max_count: int,
+                      key_domains: Optional[Sequence[Tuple[int, int]]] = None,
+                      ) -> VecTable:
     """PK-FK inner equi-join: ``right`` must be key-sorted with unique keys.
 
     searchsorted + gather — the TPU-native rewrite of Build/ProbeHTable.
-    Multi-column keys are composited (16-bit fields); larger domains need a
-    single integer key column (documented limitation of this backend).
+    Multi-column keys are packed with catalog ``key_domains`` when the
+    lowering provides them (static overflow check — overpacking raises),
+    otherwise with bounds traced jointly from both sides (collision-free
+    whenever the actual domain product fits the 32-bit accumulator).
     """
     if len(left_on) != 1 or len(right_on) != 1:
-        lk = _composite_key(left, left_on)
-        rk = _composite_key(right, right_on)
+        if key_domains is not None:
+            lk = _composite_key(left, left_on, key_domains=key_domains)
+            rk = _composite_key(right, right_on, key_domains=key_domains)
+        else:
+            lows, sizes = _joint_key_bounds(left, right, left_on, right_on)
+            lk = _composite_key(left, left_on, lows=lows, sizes=sizes)
+            rk = _composite_key(right, right_on, lows=lows, sizes=sizes)
     else:
         lk = left.cols[left_on[0]].astype(jnp.int32)
         rk = right.cols[right_on[0]].astype(jnp.int32)
@@ -248,7 +378,43 @@ def merge_join_sorted(left: VecTable, right: VecTable, left_on: Sequence[str],
     return joined
 
 
+def _joint_key_bounds(left: VecTable, right: VecTable, left_on: Sequence[str],
+                      right_on: Sequence[str]) -> Tuple[List[jax.Array], List[jax.Array]]:
+    """Shared per-column (lo, size) over the valid rows of BOTH join sides —
+    packing must agree across sides or equal keys stop matching."""
+    big = jnp.iinfo(jnp.int32).max
+    lows, sizes = [], []
+    for lk, rk in zip(left_on, right_on):
+        la, ra = _int_key(left.cols[lk]), _int_key(right.cols[rk])
+        lo = jnp.minimum(jnp.min(jnp.where(left.valid, la, big)),
+                         jnp.min(jnp.where(right.valid, ra, big)))
+        hi = jnp.maximum(jnp.max(jnp.where(left.valid, la, -big)),
+                         jnp.max(jnp.where(right.valid, ra, -big)))
+        lows.append(lo)
+        sizes.append(jnp.maximum(hi - lo + 1, 1))
+    return lows, sizes
+
+
 def topk(t: VecTable, keys: Sequence[str], ascending: Sequence[bool], k: int) -> VecTable:
+    if len(keys) == 1 and not jnp.issubdtype(t.cols[keys[0]].dtype, jnp.bool_):
+        # single numeric key: jax.lax.top_k over a validity-masked score
+        # instead of a full lexsort + gather.  top_k breaks ties by lowest
+        # index, matching the stable sort.  Ascending ints flip via bitwise
+        # NOT (~x = -x-1): strictly decreasing over the FULL int32 range,
+        # unlike negation which overflows at INT32_MIN.  (A valid key whose
+        # score equals the sentinel can still lose its slot to an earlier
+        # invalid row; the sort path remains the general-purpose tier.)
+        arr = t.cols[keys[0]]
+        k_eff = min(int(k), t.capacity)
+        if jnp.issubdtype(arr.dtype, jnp.integer):
+            sentinel = jnp.iinfo(jnp.int32).min
+            score = jnp.invert(arr.astype(jnp.int32)) if ascending[0] else arr.astype(jnp.int32)
+        else:
+            sentinel = -_F32_INF
+            score = jnp.negative(arr) if ascending[0] else arr
+        score = jnp.where(t.valid, score, sentinel)
+        _, idx = jax.lax.top_k(score, k_eff)
+        return VecTable({kk: v[idx] for kk, v in t.cols.items()}, t.valid[idx])
     s = sort_by_key(t, keys, ascending)
     return VecTable({kk: v[:k] for kk, v in s.cols.items()}, s.valid[:k])
 

@@ -1,0 +1,538 @@
+"""The sort-free physical tier for the vec flavor (ISSUE 5).
+
+Contracts:
+  * ``vec.GroupAggDirect`` (dense-bucket segment reduction) is row-for-row
+    equivalent to ``SortByKey + GroupAggSorted`` and to the interp oracle —
+    across int/bool/float keys, empty selections, all-invalid tables, and
+    max_groups boundaries;
+  * the ``groupby: sorted | direct`` strategy Choice is forceable through
+    ``compile(...)`` and chosen by ``optimize="cost"`` from the key-domain
+    statistics (low NDV → direct, huge domain → sorted);
+  * ``compact`` is the O(n) prefix-sum scatter, same semantics as before;
+  * ``topk`` takes the ``lax.top_k`` fast path on single numeric keys;
+  * composite keys no longer silently collide: grouped aggregation is
+    collision-free by construction, multi-key joins pack with real bounds
+    and raise when a static domain cannot fit the 32-bit accumulator;
+  * the ``grouped_select_agg`` Pallas kernel (use_kernels) agrees with all
+    of the above;
+  * on spmd, the costed search picks direct for the TPC-H Q1 shape and both
+    tiers match the oracle (subprocess: owns an 8-device host platform).
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.compiler import PlanCache, compile as cvm_compile
+from repro.core.expr import AggSpec, col
+from repro.frontends.dataflow import Context, avg_, count_, max_, min_, sum_
+from repro.launch.hermetic import subprocess_env
+from repro.relational import runtime as rt
+from repro.relational.runtime import VecTable
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _sorted_rows(table, keys):
+    arrs = [np.asarray(table[k]) for k in keys]
+    order = np.lexsort(tuple(reversed(arrs)))
+    return {k: np.asarray(v)[order] for k, v in table.items()}
+
+
+def _assert_tables_equal(got, want, keys, rtol=1e-4):
+    got, want = _sorted_rows(got, keys), _sorted_rows(want, keys)
+    assert set(got) == set(want)
+    for k in got:
+        g, w = np.asarray(got[k]), np.asarray(want[k])
+        assert g.shape == w.shape, (k, g.shape, w.shape)
+        if np.issubdtype(g.dtype, np.floating) or np.issubdtype(w.dtype, np.floating):
+            np.testing.assert_allclose(g, w.astype(g.dtype), rtol=rtol, err_msg=k)
+        else:
+            np.testing.assert_array_equal(g, w, err_msg=k)
+
+
+@pytest.fixture()
+def sales_ctx():
+    rng = np.random.default_rng(7)
+    n = 4096
+    ctx = Context(pad_to=512)
+    ctx.register("sales", {
+        "region": rng.integers(0, 12, n).astype(np.int32),
+        "flag": rng.integers(0, 2, n).astype(bool),
+        "amount": rng.gamma(2.0, 50.0, n).astype(np.float32),
+        "year": rng.integers(2018, 2026, n).astype(np.int32),
+    })
+    return ctx
+
+
+def grouped_query(ctx, *keys, max_groups=64):
+    return (ctx.table("sales")
+            .group_by(*(keys or ("region",)), max_groups=max_groups)
+            .agg(sum_("amount").as_("rev"), count_().as_("n"),
+                 min_("amount").as_("lo"), max_("amount").as_("hi")))
+
+
+AGGS = (AggSpec("sum", col("x"), "s"), AggSpec("count", col("x"), "c"),
+        AggSpec("min", col("x"), "lo"), AggSpec("max", col("x"), "hi"))
+
+
+# ---------------------------------------------------------------------------
+# runtime tier: group_agg_direct ≡ sort_by_key + group_agg_sorted
+# ---------------------------------------------------------------------------
+
+
+class TestRuntimeDirect:
+    def _table(self, keys_cols, n=500, cap=512, seed=0, valid=None):
+        rng = np.random.default_rng(seed)
+        data = dict(keys_cols)
+        data["x"] = rng.normal(10.0, 5.0, n).astype(np.float32)
+        t = VecTable.from_numpy(data, cap)
+        if valid is not None:
+            import jax.numpy as jnp
+            t = VecTable(t.cols, jnp.asarray(valid))
+        return t
+
+    def _check(self, t, keys, domains, max_groups=64):
+        nb = 1
+        for lo, hi in domains:
+            nb *= hi - lo + 1
+        direct = rt.group_agg_direct(t, keys, AGGS, max_groups, domains, nb)
+        ref = rt.group_agg_sorted(rt.sort_by_key(t, keys), keys, AGGS, max_groups)
+        for k in list(keys) + [a.name for a in AGGS]:
+            np.testing.assert_allclose(
+                np.asarray(direct.cols[k])[np.asarray(direct.valid)],
+                np.asarray(ref.cols[k])[np.asarray(ref.valid)],
+                rtol=1e-5, err_msg=k)
+        np.testing.assert_array_equal(np.asarray(direct.valid),
+                                      np.asarray(ref.valid))
+
+    def test_int_keys(self):
+        rng = np.random.default_rng(1)
+        k1 = rng.integers(3, 11, 500).astype(np.int32)
+        self._check(self._table({"k1": k1}), ("k1",), ((3, 10),))
+
+    def test_multi_key_int_bool(self):
+        rng = np.random.default_rng(2)
+        k1 = rng.integers(0, 5, 500).astype(np.int32)
+        k2 = rng.integers(0, 2, 500).astype(bool)
+        self._check(self._table({"k1": k1, "k2": k2}), ("k1", "k2"),
+                    ((0, 4), (0, 1)))
+
+    def test_large_key_values(self):
+        """Key values ≥ 65536 — the old 16-bit composite packing collided."""
+        rng = np.random.default_rng(3)
+        k1 = (rng.integers(0, 4, 500) * 70_000 + 100_000).astype(np.int32)
+        self._check(self._table({"k1": k1}), ("k1",), ((100_000, 310_000),))
+
+    def test_all_invalid(self):
+        t = self._table({"k1": np.zeros(500, np.int32)}, valid=np.zeros(512, bool))
+        direct = rt.group_agg_direct(t, ("k1",), AGGS, 8, ((0, 0),), 1)
+        assert not np.asarray(direct.valid).any()
+
+    def test_max_groups_boundary(self):
+        """Exactly max_groups groups, and more groups than max_groups: both
+        tiers keep the first max_groups groups in key order."""
+        k1 = np.arange(500, dtype=np.int32) % 16
+        t = self._table({"k1": k1})
+        self._check(t, ("k1",), ((0, 15),), max_groups=16)
+        self._check(t, ("k1",), ((0, 15),), max_groups=8)
+
+
+# ---------------------------------------------------------------------------
+# O(n) compact / limit
+# ---------------------------------------------------------------------------
+
+
+class TestCompact:
+    def _rand_table(self, cap=257, seed=5):
+        rng = np.random.default_rng(seed)
+        t = VecTable.from_numpy({
+            "a": rng.integers(0, 100, cap).astype(np.int32),
+            "b": rng.normal(size=cap).astype(np.float32),
+        }, cap)
+        import jax.numpy as jnp
+        return VecTable(t.cols, jnp.asarray(rng.random(cap) < 0.35))
+
+    def test_compact_matches_reference(self):
+        t = self._rand_table()
+        c = rt.compact(t)
+        mask = np.asarray(t.valid)
+        n = int(mask.sum())
+        got_valid = np.asarray(c.valid)
+        assert got_valid[:n].all() and not got_valid[n:].any()
+        for k in t.cols:
+            np.testing.assert_array_equal(np.asarray(c.cols[k])[:n],
+                                          np.asarray(t.cols[k])[mask])
+
+    def test_compact_truncates_to_max_count(self):
+        t = self._rand_table()
+        c = rt.compact(t, max_count=16)
+        assert c.capacity == 16
+        mask = np.asarray(t.valid)
+        keep = min(16, int(mask.sum()))
+        assert np.asarray(c.valid)[:keep].all()
+        for k in t.cols:
+            np.testing.assert_array_equal(np.asarray(c.cols[k])[:keep],
+                                          np.asarray(t.cols[k])[mask][:keep])
+
+    def test_limit(self):
+        t = self._rand_table(seed=6)
+        out = rt.limit(t, 10)
+        mask = np.asarray(t.valid)
+        np.testing.assert_array_equal(
+            np.asarray(out.cols["a"])[np.asarray(out.valid)],
+            np.asarray(t.cols["a"])[mask][:10])
+
+    def test_compact_empty(self):
+        import jax.numpy as jnp
+        t = self._rand_table()
+        t = VecTable(t.cols, jnp.zeros(t.capacity, bool))
+        c = rt.compact(t)
+        assert not np.asarray(c.valid).any()
+
+
+# ---------------------------------------------------------------------------
+# topk fast path
+# ---------------------------------------------------------------------------
+
+
+class TestTopK:
+    def _table(self, seed=9, cap=512, n=400):
+        rng = np.random.default_rng(seed)
+        return VecTable.from_numpy({
+            "k": rng.permutation(n * 4)[:n].astype(np.int32),  # distinct keys
+            "f": rng.normal(size=n).astype(np.float32),
+        }, cap)
+
+    @pytest.mark.parametrize("ascending", [True, False])
+    @pytest.mark.parametrize("key", ["k", "f"])
+    def test_single_key_matches_sort(self, key, ascending):
+        t = self._table()
+        fast = rt.topk(t, (key,), (ascending,), 25)
+        slow = rt.sort_by_key(t, (key,), (ascending,))
+        for c in t.cols:
+            np.testing.assert_array_equal(
+                np.asarray(fast.cols[c])[np.asarray(fast.valid)],
+                np.asarray(slow.cols[c])[:25])
+        assert np.asarray(fast.valid).all()
+
+    def test_k_exceeds_valid_rows(self):
+        t = self._table(n=20)
+        out = rt.topk(t, ("k",), (True,), 50)
+        assert int(np.asarray(out.valid).sum()) == 20
+
+    def test_ascending_includes_int32_min(self):
+        """Ascending int scores flip via bitwise NOT, not negation — the
+        global minimum INT32_MIN must not overflow into the sentinel."""
+        t = VecTable.from_numpy({
+            "k": np.array([5, np.iinfo(np.int32).min, 3], np.int32)}, 4)
+        out = rt.topk(t, ("k",), (True,), 2)
+        np.testing.assert_array_equal(
+            np.asarray(out.cols["k"])[np.asarray(out.valid)],
+            [np.iinfo(np.int32).min, 3])
+
+    def test_multi_key_still_sorts(self):
+        t = self._table()
+        out = rt.topk(t, ("k", "f"), (True, True), 10)
+        slow = rt.sort_by_key(t, ("k", "f"), (True, True))
+        np.testing.assert_array_equal(
+            np.asarray(out.cols["k"])[np.asarray(out.valid)],
+            np.asarray(slow.cols["k"])[:10])
+
+
+# ---------------------------------------------------------------------------
+# composite keys: no silent collisions
+# ---------------------------------------------------------------------------
+
+
+class TestCompositeKeys:
+    def test_grouped_agg_large_two_keys_match_oracle(self):
+        """Two int keys with values ≥ 65536: the old packed accumulator
+        collided; per-column change detection is collision-free."""
+        rng = np.random.default_rng(11)
+        n = 1000
+        ctx = Context(pad_to=256)
+        ctx.register("t", {
+            "a": (rng.integers(0, 3, n) * 100_000).astype(np.int32),
+            "b": (rng.integers(0, 3, n) * 90_001).astype(np.int32),
+            "x": rng.normal(size=n).astype(np.float32),
+        })
+        q = (ctx.table("t").group_by("a", "b", max_groups=16)
+             .agg(sum_("x").as_("s"), count_().as_("c")))
+        want = ctx.execute(q, target="interp")
+        for strat in ({"groupby": "sorted"}, {"groupby": "direct"}):
+            got = ctx.execute(q, strategy=strat)
+            _assert_tables_equal(got, want, ("a", "b"))
+
+    def test_multikey_join_large_values_match_oracle(self):
+        """First join key ≥ 65536 — the old 16-bit packing shifted it out of
+        the accumulator entirely; joint-bound packing keeps it exact."""
+        rng = np.random.default_rng(12)
+        n = 600
+        ka = rng.integers(0, 20, n) * 70_000
+        kb = rng.integers(0, 10, n)
+        ctx = Context(pad_to=256)
+        right = np.stack(np.meshgrid(np.arange(20) * 70_000, np.arange(10)),
+                         -1).reshape(-1, 2)
+        ctx.register("probe", {
+            "a": ka.astype(np.int32), "b": kb.astype(np.int32),
+            "x": rng.normal(size=n).astype(np.float32),
+        })
+        ctx.register("build", {
+            "a2": right[:, 0].astype(np.int32), "b2": right[:, 1].astype(np.int32),
+            "y": np.arange(len(right)).astype(np.float32),
+        })
+        q = ctx.table("probe").join(ctx.table("build"),
+                                    left_on=("a", "b"), right_on=("a2", "b2"))
+        want = ctx.execute(q, target="interp")
+        got = ctx.execute(q)
+        _assert_tables_equal(got, want, ("a", "b", "x"))
+
+    def test_static_domain_overflow_raises(self):
+        t = VecTable.from_numpy({
+            "a": np.zeros(8, np.int32), "b": np.zeros(8, np.int32)}, 8)
+        with pytest.raises(ValueError, match="cannot be packed"):
+            rt.merge_join_sorted(t, t, ("a", "b"), ("a", "b"), 8,
+                                 key_domains=((0, 1 << 20), (0, 1 << 20)))
+
+    def test_unpackable_without_bounds_raises(self):
+        t = VecTable.from_numpy({"a": np.zeros(8, np.int32)}, 8)
+        with pytest.raises(ValueError, match="domain bounds"):
+            rt._composite_key(t, ("a", "a"))
+
+
+# ---------------------------------------------------------------------------
+# forced strategies + the costed choice, through compile(...)
+# ---------------------------------------------------------------------------
+
+
+class TestStrategyChoice:
+    def test_forced_direct_and_sorted_match_oracle(self, sales_ctx):
+        q = grouped_query(sales_ctx, "region", "flag")
+        want = sales_ctx.execute(q, target="interp")
+        progs = {}
+        for label in ("sorted", "direct"):
+            res = sales_ctx.compile(q, strategy={"groupby": label},
+                                    cache=PlanCache())
+            progs[label] = res.program.opcodes()
+            (out,) = res(sales_ctx.sources())
+            _assert_tables_equal(out.to_numpy(), want, ("region", "flag"))
+        assert "vec.GroupAggSorted" in progs["sorted"]
+        assert "vec.GroupAggDirect" not in progs["sorted"]
+        assert "vec.GroupAggDirect" in progs["direct"]
+        assert "vec.SortByKey" not in progs["direct"]
+
+    def test_forced_direct_float_key_falls_back_to_sorted(self, sales_ctx):
+        """Float keys have no catalog domain — the direct tier falls back to
+        the always-valid sorted lowering per instruction, still ≡ oracle."""
+        q = (sales_ctx.table("sales").group_by("amount", max_groups=4096)
+             .agg(count_().as_("n")))
+        res = sales_ctx.compile(q, strategy={"groupby": "direct"},
+                                cache=PlanCache())
+        assert "vec.GroupAggSorted" in res.program.opcodes()
+        assert "vec.GroupAggDirect" not in res.program.opcodes()
+        want = sales_ctx.execute(q, target="interp")
+        (out,) = res(sales_ctx.sources())
+        _assert_tables_equal(out.to_numpy(), want, ("amount",))
+
+    def test_cost_low_ndv_selects_direct(self, sales_ctx):
+        res = sales_ctx.compile(grouped_query(sales_ctx, "region", "flag"),
+                                optimize="cost", cache=PlanCache())
+        assert dict(res.strategy)["groupby"] == "direct"
+        assert "vec.GroupAggDirect" in res.program.opcodes()
+        labels = [c.label() for c in res.decision.candidates]
+        assert any("groupby=sorted" in l for l in labels)
+
+    def test_cost_huge_domain_selects_sorted(self):
+        """A key spread over a 2^17 domain: the dense bucket table would
+        dwarf one pass over the rows, so the sorted tier must win."""
+        rng = np.random.default_rng(13)
+        n = 4096
+        ctx = Context(pad_to=512)
+        ctx.register("sales", {
+            "k": rng.integers(0, 1 << 17, n).astype(np.int32),
+            "amount": rng.gamma(2.0, 50.0, n).astype(np.float32),
+        })
+        q = (ctx.table("sales").group_by("k", max_groups=4096)
+             .agg(sum_("amount").as_("rev")))
+        res = ctx.compile(q, optimize="cost", cache=PlanCache())
+        assert dict(res.strategy)["groupby"] == "sorted"
+        assert "vec.GroupAggSorted" in res.program.opcodes()
+
+    def test_direct_strategy_is_cache_keyed(self, sales_ctx):
+        cache = PlanCache()
+        q = grouped_query(sales_ctx)
+        r1 = sales_ctx.compile(q, strategy={"groupby": "direct"}, cache=cache)
+        r2 = sales_ctx.compile(q, strategy={"groupby": "sorted"}, cache=cache)
+        r3 = sales_ctx.compile(q, strategy={"groupby": "direct"}, cache=cache)
+        assert not r1.cache_hit and not r2.cache_hit and r3.cache_hit
+
+    def test_empty_selection_matches_oracle(self, sales_ctx):
+        q = (sales_ctx.table("sales").filter(col("year") >= 3000)
+             .group_by("region", max_groups=64).agg(count_().as_("n")))
+        want = sales_ctx.execute(q, target="interp")
+        assert len(np.asarray(want["n"]).ravel()) == 0
+        for label in ("sorted", "direct"):
+            got = sales_ctx.execute(q, strategy={"groupby": label})
+            assert len(got["n"]) == 0
+
+    def test_redefined_key_column_invalidates_domain(self, sales_ctx):
+        """A computed column reusing a key's name must drop its domain —
+        a stale bound would let the direct tier silently merge groups."""
+        q = (sales_ctx.table("sales")
+             .with_columns(region=col("region") * 10)
+             .group_by("region", max_groups=256)
+             .agg(count_().as_("n")))
+        want = sales_ctx.execute(q, target="interp")
+        res = sales_ctx.compile(q, strategy={"groupby": "direct"},
+                                cache=PlanCache())
+        # no trustworthy domain → the direct lowering falls back to sorted
+        assert "vec.GroupAggDirect" not in res.program.opcodes()
+        (out,) = res(sales_ctx.sources())
+        _assert_tables_equal(out.to_numpy(), want, ("region",))
+
+    def test_fused_predicate_in_direct_plan(self, sales_ctx):
+        """MaskSelect folds into GroupAggDirect (single-pass Q1 shape)."""
+        q = (sales_ctx.table("sales").filter(col("year") >= 2020)
+             .group_by("region", max_groups=64)
+             .agg(sum_("amount").as_("rev"), count_().as_("n")))
+        res = sales_ctx.compile(q, strategy={"groupby": "direct"},
+                                cache=PlanCache())
+        ops = res.program.opcodes()
+        assert "vec.GroupAggDirect" in ops and "vec.MaskSelect" not in ops
+        want = sales_ctx.execute(q, target="interp")
+        (out,) = res(sales_ctx.sources())
+        _assert_tables_equal(out.to_numpy(), want, ("region",))
+
+
+# ---------------------------------------------------------------------------
+# the Pallas kernel tier
+# ---------------------------------------------------------------------------
+
+
+class TestGroupedSelectAggKernel:
+    def test_kernel_matches_oracle(self, sales_ctx):
+        q = (sales_ctx.table("sales").filter(col("year") >= 2021)
+             .group_by("region", "flag", max_groups=64)
+             .agg(sum_("amount").as_("rev"), count_().as_("n"),
+                  min_("amount").as_("lo"), max_("amount").as_("hi")))
+        want = sales_ctx.execute(q, target="interp")
+        res = sales_ctx.compile(q, strategy={"groupby": "direct"},
+                                use_kernels=True, cache=PlanCache())
+        assert "vec.GroupAggDirect" in res.program.opcodes()
+        (out,) = res(sales_ctx.sources())
+        _assert_tables_equal(out.to_numpy(), want, ("region", "flag"))
+
+    def test_kernel_empty_selection(self, sales_ctx):
+        q = (sales_ctx.table("sales").filter(col("year") >= 3000)
+             .group_by("region", max_groups=64).agg(count_().as_("n")))
+        res = sales_ctx.compile(q, strategy={"groupby": "direct"},
+                                use_kernels=True, cache=PlanCache())
+        (out,) = res(sales_ctx.sources())
+        assert len(out.to_numpy()["n"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# spmd acceptance: cost picks direct for the Q1 shape (own device fleet)
+# ---------------------------------------------------------------------------
+
+SPMD_DIRECT_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+
+    from repro.compiler import PlanCache, compile as cvm_compile
+    from repro.core.expr import col
+    from repro.frontends.dataflow import Context, count_, sum_
+
+    rng = np.random.default_rng(21)
+    n = 8192
+    ctx = Context(pad_to=1024)
+    ctx.register("lineitem", {
+        "rf": rng.integers(0, 3, n).astype(np.int32),
+        "ls": rng.integers(0, 2, n).astype(np.int32),
+        "qty": rng.integers(1, 50, n).astype(np.int32),
+        "price": rng.gamma(2.0, 100.0, n).astype(np.float32),
+        "ship": rng.integers(0, 2500, n).astype(np.int32),
+    })
+    q1 = (ctx.table("lineitem")
+          .filter(col("ship") <= 2000)
+          .group_by("rf", "ls", max_groups=8)
+          .agg(sum_("qty").as_("sum_qty"), sum_("price").as_("rev"),
+               count_().as_("cnt")))
+    program = q1.program()
+    catalog = ctx.catalog()
+    out = {}
+
+    res = cvm_compile(program, target="spmd", parallel=8, catalog=catalog,
+                      optimize="cost", cache=False)
+    out["strategy"] = dict(res.strategy)
+    out["ops"] = sorted(set(res.program.opcodes()))
+
+    want = ctx.execute(q1, target="interp")
+    o_w = np.lexsort((np.asarray(want["ls"]), np.asarray(want["rf"])))
+    for label in ("sorted", "direct"):
+        r = cvm_compile(program, target="spmd", parallel=8, catalog=catalog,
+                        strategy={"groupby": label}, cache=False)
+        (got_t,) = r(ctx.sources())
+        got = got_t.to_numpy()
+        o_g = np.lexsort((got["ls"], got["rf"]))
+        np.testing.assert_allclose(got["rev"][o_g],
+                                   np.asarray(want["rev"]).ravel()[o_w],
+                                   rtol=1e-4)
+        np.testing.assert_array_equal(got["cnt"][o_g],
+                                      np.asarray(want["cnt"]).ravel()[o_w])
+        out[label + "_ok"] = True
+        out[label + "_ops"] = sorted(set(r.program.opcodes()))
+
+    # the direct tier composes with the exchange recombine (extended
+    # PushGroupedCombineIntoMesh): force both and check the oracle again
+    r = cvm_compile(program, target="spmd", parallel=8, catalog=catalog,
+                    strategy={"groupby": "direct",
+                              "grouped-recombine": "exchange"}, cache=False)
+    (got_t,) = r(ctx.sources())
+    got = got_t.to_numpy()
+    o_g = np.lexsort((got["ls"], got["rf"]))
+    np.testing.assert_allclose(got["rev"][o_g],
+                               np.asarray(want["rev"]).ravel()[o_w], rtol=1e-4)
+    out["exchange_direct_ops"] = sorted(set(
+        op for p in r.program.walk() for op in p.opcodes()))
+    print("RESULTS" + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def spmd_direct_results():
+    proc = subprocess.run(
+        [sys.executable, "-c", SPMD_DIRECT_SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        env=subprocess_env(ROOT),
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULTS")][0]
+    return json.loads(line[len("RESULTS"):])
+
+
+class TestSpmdDirectChoice:
+    def test_cost_selects_direct_on_spmd(self, spmd_direct_results):
+        r = spmd_direct_results
+        assert r["strategy"]["groupby"] == "direct"
+        assert "vec.GroupAggDirect" in r["ops"]
+
+    def test_both_tiers_match_interp(self, spmd_direct_results):
+        assert spmd_direct_results["sorted_ok"]
+        assert spmd_direct_results["direct_ok"]
+        assert "vec.GroupAggDirect" in spmd_direct_results["direct_ops"]
+        assert "vec.GroupAggSorted" in spmd_direct_results["sorted_ops"]
+
+    def test_direct_composes_with_exchange(self, spmd_direct_results):
+        ops = spmd_direct_results["exchange_direct_ops"]
+        assert "mesh.ExchangeByKey" in ops
+        assert "vec.GroupAggDirect" in ops
+        assert "vec.GroupAggSorted" not in ops

@@ -22,7 +22,10 @@ driver's decision), and markdown tables on stdout.
 Usage: PYTHONPATH=src:. python benchmarks/perf_steps.py [--compile-only]
 (--compile-only runs just the compile-pass/cost report — the artifact CI
 uploads per PR; --groupby-bench runs just the BENCH_5.json group-by
-strategy benchmark.)
+strategy benchmark; --trace runs traced executions of the same cells →
+artifacts/perf_steps/trace__<cell>.json Chrome traces + BENCH_6.json with
+the per-op runtime breakdown, cardinality-miss stats, and the <5%
+tracing-disabled overhead guard.)
 """
 
 import json
@@ -128,20 +131,12 @@ def compile_pass_report():
           f"lookup={lookup_ms:.3f} ms (first compile {res.total_s * 1e3:.2f} ms)")
 
 
-def groupby_bench_report(reps: int = 20):
-    """Forced sorted-vs-direct grouped-aggregation wall times → BENCH_5.json.
-
-    Two cells: a TPC-H Q1-style low-NDV grouping (two small-domain keys,
-    selective filter — where the sort-free tier must win ≥1.5×) and a
-    high-NDV grouping over a 2^17-value key domain (where the dense bucket
-    table swamps one pass and the sorted tier should hold).  Also records
-    what ``optimize="cost"`` actually picked per cell, so future PRs have a
-    perf + decision trajectory to compare against.
-    """
-    os.environ.setdefault("JAX_PLATFORMS", "cpu")
-    import jax
+def _groupby_cells():
+    """The two grouped-aggregation cells shared by the BENCH_5 strategy
+    benchmark and the BENCH_6 traced-execution report: a TPC-H Q1-style
+    low-NDV grouping (two small-domain keys, selective filter) and a
+    high-NDV grouping whose key domain (2^20) ≫ rows (2^13)."""
     import numpy as np
-    from repro.compiler import PlanCache, compile as cvm_compile
     from repro.core.expr import col
     from repro.frontends.dataflow import Context, count_, sum_
 
@@ -155,9 +150,8 @@ def groupby_bench_report(reps: int = 20):
         "price": rng.gamma(2.0, 100.0, n).astype(np.float32),
         "ship": rng.integers(0, 2500, n).astype(np.int32),
     })
-    # high-NDV cell: key domain (2^20) ≫ rows (2^13) — the dense bucket
-    # table dwarfs one pass over the rows, so sorted should hold this side
-    # of the crossover
+    # high-NDV cell: the dense bucket table dwarfs one pass over the rows,
+    # so sorted should hold this side of the crossover
     m = 1 << 13
     ctx.register("orders", {
         "okey": rng.integers(0, 1 << 20, m).astype(np.int32),
@@ -173,7 +167,22 @@ def groupby_bench_report(reps: int = 20):
                      .group_by("okey", max_groups=m)
                      .agg(sum_("total").as_("rev"), count_().as_("cnt"))),
     }
+    return ctx, cells
 
+
+def groupby_bench_report(reps: int = 20):
+    """Forced sorted-vs-direct grouped-aggregation wall times → BENCH_5.json.
+
+    Two cells (see :func:`_groupby_cells`): the sort-free tier must win the
+    low-NDV side, the sorted tier should hold the high-NDV side.  Also
+    records what ``optimize="cost"`` actually picked per cell, so future PRs
+    have a perf + decision trajectory to compare against.
+    """
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax
+    from repro.compiler import PlanCache
+
+    ctx, cells = _groupby_cells()
     sources = ctx.sources()
     record = {"bench": "groupby_sorted_vs_direct", "reps": reps}
     for cell, (rows, q) in cells.items():
@@ -198,8 +207,89 @@ def groupby_bench_report(reps: int = 20):
     print(f"[perf] wrote {ROOT / 'BENCH_5.json'}")
 
 
+def trace_report(reps: int = 30):
+    """Traced executions → Chrome traces + BENCH_6.json.
+
+    Per cell: a ``trace__<cell>.json`` Chrome trace (compile-pass spans
+    nested under the compile span, the execute span, per-operator
+    cardinality annotations), the jit path's estimate-vs-actual cardinality
+    records, and the eager interpreter's per-operator wall-time breakdown.
+    Plus the overhead guard: with tracing *disabled*, the instrumented
+    ``CompileResult.__call__`` on the low-NDV Q1-style hot path must stay
+    within 5% of calling the bare executable (the BENCH_5 measurement
+    convention).
+    """
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import statistics
+    import jax
+    from repro.compiler import PlanCache
+    from repro.obs import tracing, write_chrome_trace
+
+    ctx, cells = _groupby_cells()
+    sources = ctx.sources()
+    record = {"bench": "traced_execution", "reps": reps}
+
+    for cell, (rows, q) in cells.items():
+        with tracing() as tr:
+            res = ctx.compile(q, optimize="cost", cache=PlanCache())
+            jax.block_until_ready(res(sources))
+        trace_path = OUT / f"trace__{cell}.json"
+        write_chrome_trace(trace_path, tr)
+        prof = res.profile
+        entry = {
+            "rows": rows,
+            "strategy": dict(res.strategy),
+            "wall_s": prof.wall_s,
+            "worst_cardinality_miss": prof.worst_miss,
+            "operators": prof.records(),
+        }
+        # the eager oracle can time individual operators — the per-op
+        # runtime breakdown the jitted path cannot observe from inside XLA
+        with tracing():
+            ires = ctx.compile(q, target="interp", cache=PlanCache())
+            ires(ctx.tables)
+        entry["interp_op_wall_s"] = {o["op"]: o["wall_s"]
+                                     for o in ires.profile.records()}
+        record[cell] = entry
+        print(f"[perf] trace {cell}: {prof.wall_s * 1e3:.1f} ms, "
+              f"worst miss {prof.worst_miss * 100:.0f}%, "
+              f"{len(prof.observations)} op(s) → {trace_path.name}", flush=True)
+
+    # overhead guard: tracing disabled, wrapped call vs bare executable
+    q = cells["low_ndv_q1"][1]
+    res = ctx.compile(q, cache=PlanCache())
+    jax.block_until_ready(res(sources))  # warm
+
+    def median_call(fn):
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts.append(time.perf_counter() - t0)
+        return statistics.median(ts)
+
+    direct_s = median_call(lambda: res.executable(sources))
+    wrapped_s = median_call(lambda: res(sources))
+    ratio = wrapped_s / direct_s
+    ok = ratio < 1.05
+    record["overhead_guard"] = {
+        "cell": "low_ndv_q1", "direct_us": direct_s * 1e6,
+        "wrapped_us": wrapped_s * 1e6, "ratio": ratio,
+        "threshold": 1.05, "pass": ok,
+    }
+    print(f"[perf] tracing-disabled overhead: direct {direct_s * 1e6:.0f} us, "
+          f"wrapped {wrapped_s * 1e6:.0f} us → ratio {ratio:.3f} "
+          f"({'PASS' if ok else 'FAIL'} < 1.05)", flush=True)
+
+    (ROOT / "BENCH_6.json").write_text(json.dumps(record, indent=2))
+    print(f"[perf] wrote {ROOT / 'BENCH_6.json'}")
+
+
 def main():
     OUT.mkdir(parents=True, exist_ok=True)
+    if "--trace" in sys.argv:
+        trace_report()
+        return
     if "--groupby-bench" in sys.argv:
         groupby_bench_report()
         return

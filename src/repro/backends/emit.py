@@ -42,6 +42,53 @@ class EvalCtx:
     mesh: Any = None            # set by the SPMD backend
     axis: Optional[str] = None  # mesh axis inside shard_map bodies
     interpret: bool = True      # pallas interpret mode (CPU container)
+    #: traced executions install a dict here; tapped ops accumulate
+    #: ``key → [occurrences, rows_in, rows_out]`` (rows are traced scalars
+    #: under jit — returned from the compiled body, never host callbacks)
+    taps: Optional[Dict[str, List[Any]]] = None
+
+
+def tap_rows(v: Any) -> Any:
+    """Cardinality of one runtime value: valid rows for a VecTable (a traced
+    scalar under jit), leading dim for arrays and column dicts, summed
+    chunks for split sequences, 1 for singles."""
+    if isinstance(v, VecTable):
+        return v.count()
+    if isinstance(v, dict):
+        if not v:
+            return 0
+        first = next(iter(v.values()))
+        return first.shape[0] if getattr(first, "ndim", 0) >= 1 else 1
+    if isinstance(v, (list, tuple)):
+        return sum(tap_rows(c) for c in v)
+    shape = getattr(v, "shape", None)
+    if shape:
+        return shape[0]
+    return 1
+
+
+def record_tap(ctx: EvalCtx, program: Program, index: int, ins: Instruction,
+               args: Sequence[Any], outs: Sequence[Any]) -> None:
+    """Accumulate one instruction's measured cardinality into ``ctx.taps``.
+
+    Repeated hits of the same instruction (unrolled ConcurrentExecute
+    bodies) sum their row counts — the summed-chunk global cardinality the
+    profile joins against the per-chunk estimate × occurrences."""
+    from ..obs.feedback import TAPPED_OPS, tap_key
+
+    if ins.opcode not in TAPPED_OPS or not ins.outputs:
+        return
+    key = tap_key(program.name, index, ins.opcode, ins.outputs[0].name)
+    rows_in = tap_rows(args[0]) if args else None
+    rows_out = tap_rows(outs[0])
+    entry = ctx.taps.get(key)
+    if entry is None:
+        ctx.taps[key] = [1, rows_in, rows_out]
+    else:
+        entry[0] += 1
+        entry[1] = (None if entry[1] is None or rows_in is None
+                    else entry[1] + rows_in)
+        entry[2] = entry[2] + rows_out
 
 
 def evaluate_program(ctx: EvalCtx, program: Program, *args: Any) -> List[Any]:
@@ -49,11 +96,14 @@ def evaluate_program(ctx: EvalCtx, program: Program, *args: Any) -> List[Any]:
     if len(args) != len(program.inputs):
         raise ValueError(f"{program.name}: expected {len(program.inputs)} args")
     env: Dict[str, Any] = {r.name: v for r, v in zip(program.inputs, args)}
-    for ins in program.body:
+    for i, ins in enumerate(program.body):
         fn = _EMIT.get(ins.opcode)
         if fn is None:
             raise NotImplementedError(f"no JAX emitter for {ins.opcode}")
-        outs = fn(ctx, ins, [env[r.name] for r in ins.inputs])
+        ins_args = [env[r.name] for r in ins.inputs]
+        outs = fn(ctx, ins, ins_args)
+        if ctx.taps is not None:
+            record_tap(ctx, program, i, ins, ins_args, outs)
         for r, v in zip(ins.outputs, outs):
             env[r.name] = v
     return [env[r.name] for r in program.results]

@@ -14,6 +14,7 @@ ConcurrentExecute runs workers sequentially — the interpreter defines
 
 from __future__ import annotations
 
+import time
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
@@ -32,11 +33,30 @@ def impl(opcode: str):
     return deco
 
 
+def _rows_of(v: Any) -> int:
+    """Cardinality of one interpreter value (see the value model above)."""
+    if isinstance(v, dict):
+        if not v:
+            return 0
+        first = next(iter(v.values()))
+        return int(np.asarray(first).shape[0]) if np.ndim(first) >= 1 else 1
+    if isinstance(v, (list, tuple)):
+        return sum(_rows_of(c) for c in v)
+    if np.ndim(v) >= 1:
+        return int(np.asarray(v).shape[0])
+    return 1
+
+
 class Interpreter:
     def __init__(self, sources: Optional[Mapping[str, Any]] = None,
-                 max_while_iters: int = 10_000) -> None:
+                 max_while_iters: int = 10_000, trace: bool = False) -> None:
         self.sources = dict(sources or {})
         self.max_while_iters = max_while_iters
+        #: tracing state (``trace=True``): tap key → [occ, rows_in, rows_out]
+        #: and tap key → accumulated wall seconds.  The interpreter is eager,
+        #: so unlike the jitted backends it can time individual operators.
+        self.taps: Optional[Dict[str, List[Any]]] = {} if trace else None
+        self.walls: Dict[str, float] = {}
 
     def run(self, program: Program, *args: Any) -> List[Any]:
         if len(args) != len(program.inputs):
@@ -44,6 +64,8 @@ class Interpreter:
                 f"program {program.name} takes {len(program.inputs)} inputs, got {len(args)}"
             )
         env: Dict[str, Any] = {r.name: v for r, v in zip(program.inputs, args)}
+        if self.taps is not None:
+            return self._run_traced(program, env)
         for ins in program.body:
             fn = _EVAL.get(ins.opcode)
             if fn is None:
@@ -51,6 +73,45 @@ class Interpreter:
             outs = fn(self, ins, [env[r.name] for r in ins.inputs])
             if len(outs) != len(ins.outputs):
                 raise RuntimeError(f"{ins.opcode}: impl returned {len(outs)} values")
+            for r, v in zip(ins.outputs, outs):
+                env[r.name] = v
+        return [env[r.name] for r in program.results]
+
+    def _run_traced(self, program: Program, env: Dict[str, Any]) -> List[Any]:
+        """The measured twin of the main loop: a span per operator (nested
+        program runs — ConcurrentExecute bodies — nest naturally), wall time
+        and output cardinality per tapped op."""
+        from ..obs.feedback import TAPPED_OPS, tap_key
+        from ..obs.trace import get_tracer
+
+        tracer = get_tracer()
+        for i, ins in enumerate(program.body):
+            fn = _EVAL.get(ins.opcode)
+            if fn is None:
+                raise NotImplementedError(f"interpreter: no impl for {ins.opcode}")
+            ins_args = [env[r.name] for r in ins.inputs]
+            reg = ins.outputs[0].name if ins.outputs else ""
+            t0 = time.perf_counter()
+            with tracer.span(ins.opcode, cat="execute.op",
+                             program=program.name, register=reg) as sp:
+                outs = fn(self, ins, ins_args)
+            dur = time.perf_counter() - t0
+            if len(outs) != len(ins.outputs):
+                raise RuntimeError(f"{ins.opcode}: impl returned {len(outs)} values")
+            if ins.opcode in TAPPED_OPS and ins.outputs:
+                key = tap_key(program.name, i, ins.opcode, reg)
+                rows_in = _rows_of(ins_args[0]) if ins_args else None
+                rows_out = _rows_of(outs[0])
+                entry = self.taps.get(key)
+                if entry is None:
+                    self.taps[key] = [1, rows_in, rows_out]
+                else:
+                    entry[0] += 1
+                    entry[1] = (None if entry[1] is None or rows_in is None
+                                else entry[1] + rows_in)
+                    entry[2] += rows_out
+                self.walls[key] = self.walls.get(key, 0.0) + dur
+                sp.set(rows_in=rows_in, rows_out=rows_out)
             for r, v in zip(ins.outputs, outs):
                 env[r.name] = v
         return [env[r.name] for r in program.results]
@@ -481,6 +542,10 @@ class InterpCompiled:
     """Executable wrapper matching the backends' ``compiled(sources, *args)``
     convention; each call runs a fresh Interpreter over the program."""
 
+    #: the eager interpreter emits real per-operator spans during a traced
+    #: run, so the driver must not add synthetic annotations on top
+    emits_op_spans = True
+
     def __init__(self, program: Program, max_while_iters: int = 10_000) -> None:
         self.program = program
         self.max_while_iters = max_while_iters
@@ -490,6 +555,18 @@ class InterpCompiled:
         interp = Interpreter(sources=dict(sources or {}),
                              max_while_iters=self.max_while_iters)
         return interp.run(self.program, *args)
+
+    def run_traced(self, sources: Optional[Mapping[str, Any]] = None,
+                   *args: Any):
+        """Execute and measure: ``(results, cards, per-op wall seconds)``."""
+        from ..obs.feedback import TapRecord
+
+        interp = Interpreter(sources=dict(sources or {}),
+                             max_while_iters=self.max_while_iters, trace=True)
+        outs = interp.run(self.program, *args)
+        cards = {k: TapRecord(occ, ri, int(ro))
+                 for k, (occ, ri, ro) in interp.taps.items()}
+        return outs, cards, dict(interp.walls)
 
 
 class InterpBackend:

@@ -22,9 +22,28 @@ from .emit import EvalCtx, evaluate_program
 class Compiled:
     program: Program
     fn: Callable[..., List[Any]]
+    #: variant of ``fn`` that also returns the cardinality taps (jitted
+    #: separately — the traced path must not slow the plain one down)
+    traced_fn: Optional[Callable[..., Any]] = None
 
     def __call__(self, sources: Optional[Mapping[str, Any]] = None, *args: Any) -> List[Any]:
         return self.fn(dict(sources or {}), *args)
+
+    def run_traced(self, sources: Optional[Mapping[str, Any]] = None,
+                   *args: Any):
+        """Execute and measure: ``(results, {tap key → TapRecord}, {})``.
+
+        Cardinalities come back as scalar outputs of the jitted body
+        (host-callback-free); per-op wall times are not observable inside a
+        fused XLA module, hence the empty third element."""
+        from ..obs.feedback import TapRecord
+
+        outs, taps = self.traced_fn(dict(sources or {}), *args)
+        cards = {
+            k: TapRecord(int(occ), None if ri is None else int(ri), int(ro))
+            for k, (occ, ri, ro) in taps.items()
+        }
+        return outs, cards, {}
 
 
 class LocalBackend:
@@ -42,5 +61,12 @@ class LocalBackend:
                           interpret=self.interpret)
             return evaluate_program(ctx, program, *args)
 
+        def run_traced(sources: Dict[str, Any], *args: Any):
+            ctx = EvalCtx(sources=sources, use_kernels=self.use_kernels,
+                          interpret=self.interpret, taps={})
+            outs = evaluate_program(ctx, program, *args)
+            return outs, ctx.taps
+
         fn = jax.jit(run) if self.jit else run
-        return Compiled(program, fn)
+        tfn = jax.jit(run_traced) if self.jit else run_traced
+        return Compiled(program, fn, tfn)

@@ -223,11 +223,17 @@ def _exchange(ctx, ins, args):
 
 def evaluate_spmd_program(ctx: EvalCtx, program: Program, *args: Any) -> List[Any]:
     env: Dict[str, Any] = {r.name: v for r, v in zip(program.inputs, args)}
-    for ins in program.body:
+    for i, ins in enumerate(program.body):
         fn = _SPMD_EMIT.get(ins.opcode) or base_emit._EMIT.get(ins.opcode)
         if fn is None:
             raise NotImplementedError(f"spmd backend: no emitter for {ins.opcode}")
-        outs = fn(ctx, ins, [env[r.name] for r in ins.inputs])
+        ins_args = [env[r.name] for r in ins.inputs]
+        outs = fn(ctx, ins, ins_args)
+        if ctx.taps is not None:
+            # top-level only: MeshExecute bodies run under shard_map with a
+            # fresh tap-free ctx, so a stacked MeshExecute output is tapped
+            # here once — its count() sums valid rows across all shards
+            base_emit.record_tap(ctx, program, i, ins, ins_args, outs)
         for r, v in zip(ins.outputs, outs):
             env[r.name] = v
     return [env[r.name] for r in program.results]
@@ -242,9 +248,21 @@ def evaluate_spmd_program(ctx: EvalCtx, program: Program, *args: Any) -> List[An
 class SpmdCompiled:
     program: Program
     fn: Callable[..., List[Any]]
+    traced_fn: Optional[Callable[..., Any]] = None
 
     def __call__(self, sources=None, *args):
         return self.fn(dict(sources or {}), *args)
+
+    def run_traced(self, sources=None, *args):
+        """Execute and measure: ``(results, {tap key → TapRecord}, {})``."""
+        from ..obs.feedback import TapRecord
+
+        outs, taps = self.traced_fn(dict(sources or {}), *args)
+        cards = {
+            k: TapRecord(int(occ), None if ri is None else int(ri), int(ro))
+            for k, (occ, ri, ro) in taps.items()
+        }
+        return outs, cards, {}
 
 
 class SpmdBackend:
@@ -275,5 +293,12 @@ class SpmdBackend:
                           mesh=self.mesh)
             return evaluate_spmd_program(ctx, program, *args)
 
+        def run_traced(sources: Dict[str, Any], *args: Any):
+            ctx = EvalCtx(sources=sources, use_kernels=self.use_kernels,
+                          mesh=self.mesh, taps={})
+            outs = evaluate_spmd_program(ctx, program, *args)
+            return outs, ctx.taps
+
         fn = jax.jit(run) if self.jit else run
-        return SpmdCompiled(program, fn)
+        tfn = jax.jit(run_traced) if self.jit else run_traced
+        return SpmdCompiled(program, fn, tfn)

@@ -33,7 +33,7 @@ from .stats import Statistics, StatsEnv, propagate
 
 __all__ = [
     "estimate_cost", "CostModel", "CostCalibration",
-    "Candidate", "PlanDecision",
+    "Candidate", "PlanDecision", "CALIBRATION", "EXEC_CALIBRATION",
 ]
 
 #: relative cost of moving one byte across the interconnect vs touching it
@@ -165,6 +165,12 @@ class CostCalibration:
 
 #: process-wide calibration, seeded from the plan store when one is used
 CALIBRATION = CostCalibration()
+
+#: the runtime sibling of :data:`CALIBRATION`: abstract plan-cost units →
+#: measured *execution* seconds, fed by traced executions through
+#: ``repro.obs.feedback.FEEDBACK`` — the measured leg of the
+#: estimate-vs-actual feedback loop
+EXEC_CALIBRATION = CostCalibration()
 
 
 # ---------------------------------------------------------------------------

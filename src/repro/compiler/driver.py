@@ -24,8 +24,10 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from ..core.program import Program
 from ..core.verify import verify
+from ..obs.trace import get_tracer
 from .cost import CALIBRATION, Candidate, PlanDecision, estimate_cost
 from .fingerprint import fingerprint, fingerprint_value
+from .stats import Statistics
 from .targets import Choice, CompileOptions, get_target, target_epoch
 
 __all__ = [
@@ -68,11 +70,15 @@ def run_passes(program: Program, passes: Sequence[Any], stage: str = "pipeline",
     frontends with their own planning rewrites (tensor) call it directly so
     their passes are measured identically.
     """
+    tracer = get_tracer()
     for p in passes:
         before = program_size(program)
         t0 = time.perf_counter()
-        out = p.apply(program)
+        with tracer.span(p.name, cat="compile.pass", stage=stage) as sp:
+            out = p.apply(program)
         wall = time.perf_counter() - t0
+        after = program_size(out)
+        sp.set(size_before=before, size_after=after)
         if check:
             try:
                 verify(out, allow_unknown_ops=True)
@@ -81,8 +87,7 @@ def run_passes(program: Program, passes: Sequence[Any], stage: str = "pipeline",
                     f"pass {p.name!r} broke the program:\n{out.render()}"
                 ) from e
         if records is not None:
-            records.append(PassRecord(stage, p.name, wall, before,
-                                      program_size(out)))
+            records.append(PassRecord(stage, p.name, wall, before, after))
         program = out
     return program
 
@@ -108,20 +113,59 @@ class CompileResult:
     strategy: Tuple[Tuple[str, str], ...] = ()
     #: costed-search provenance (None for fixed-path compiles)
     decision: Optional[PlanDecision] = None
+    #: the catalog statistics the plan was costed under (estimate side of
+    #: the estimate-vs-actual join)
+    stats: Optional[Statistics] = None
+    #: where this result came from: "miss" (freshly compiled),
+    #: "memory" (plan-cache hit), "store" (plan-store strategy replay)
+    cache_source: str = "miss"
+    #: latest traced execution's estimate-vs-actual profile
+    #: (:class:`~repro.obs.feedback.RuntimeProfile`; None until a traced run)
+    profile: Optional[Any] = None
 
     def __call__(self, sources: Any = None, *args: Any) -> Any:
-        return self.executable(sources, *args)
+        tracer = get_tracer()
+        runner = getattr(self.executable, "run_traced", None)
+        if not tracer.enabled or runner is None:
+            # the hot path: plain dispatch, no span, no profile bookkeeping
+            return self.executable(sources, *args)
+
+        from ..obs import feedback as fb
+
+        t0 = time.perf_counter()
+        with tracer.span(f"execute:{self.source.name}", cat="execute",
+                         target=self.target,
+                         fingerprint=self.fingerprint[:12]) as sp:
+            outs, cards, walls = runner(sources, *args)
+        wall = time.perf_counter() - t0
+        profile = fb.build_profile(self, cards, wall, wall_by_key=walls)
+        sp.set(rows_measured=len(profile.observations))
+        if not getattr(self.executable, "emits_op_spans", False):
+            # jitted backends can't time ops inside the compiled body;
+            # record zero-duration cardinality annotations instead
+            for o in profile.observations:
+                tracer.record_complete(
+                    o.opcode, cat="execute.op", t0=t0, dur_s=0.0,
+                    register=o.register, rows_out=o.rows_out,
+                    rows_in=o.rows_in, est_rows=o.est_rows,
+                    rel_miss=o.rel_miss, table=o.table)
+        self.profile = profile
+        fb.FEEDBACK.record(profile)
+        return outs
 
     @property
     def total_s(self) -> float:
         return self.backend_s + sum(r.wall_s for r in self.records)
 
     def explain(self) -> str:
-        """Per-pass wall time, IR-size deltas, and the plan decision."""
+        """Per-pass wall time, IR-size deltas, the plan decision, and —
+        after a traced execution — the estimated-vs-actual cardinalities."""
         head = (f"compile[{self.target}] {self.source.name}: "
                 + ("cache hit" if self.cache_hit
                    else f"{self.total_s * 1e3:.2f} ms")
-                + f" (fingerprint {self.fingerprint[:12]})")
+                + f" (fingerprint {self.fingerprint[:12]})"
+                + f" cache={'hit' if self.cache_hit else 'miss'}"
+                + f" source={self.cache_source}")
         if self.strategy:
             head += (" strategy "
                      + ", ".join(f"{k}={v}" for k, v in self.strategy))
@@ -135,6 +179,8 @@ class CompileResult:
                      f"| {program_size(self.program)} | +0 |")
         if self.decision is not None:
             lines.append(self.decision.render())
+        if self.profile is not None:
+            lines.append(self.profile.render())
         return "\n".join(lines)
 
     def explain_records(self) -> List[Dict[str, Any]]:
@@ -150,6 +196,32 @@ class CompileResult:
                      "size_before": size, "size_after": size})
         return recs
 
+    def metrics(self) -> Dict[str, Any]:
+        """Structured metrics: compile provenance, runtime profile, and the
+        active tracer's counters/histograms, in one JSON-ready dict."""
+        out: Dict[str, Any] = {
+            "target": self.target,
+            "program": self.source.name,
+            "fingerprint": self.fingerprint,
+            "cache": "hit" if self.cache_hit else "miss",
+            "cache_source": self.cache_source,
+            "strategy": dict(self.strategy),
+            "compile": {"total_s": self.total_s,
+                        "backend_s": self.backend_s,
+                        "passes": self.explain_records()},
+        }
+        if self.decision is not None:
+            out["decision"] = self.decision.records()
+        if self.profile is not None:
+            out["runtime"] = {
+                "wall_s": self.profile.wall_s,
+                "est_cost": self.profile.est_cost,
+                "worst_miss": self.profile.worst_miss,
+                "operators": self.profile.records(),
+            }
+        out["tracer"] = get_tracer().metrics()
+        return out
+
 
 # ---------------------------------------------------------------------------
 # plan cache
@@ -164,14 +236,17 @@ class PlanCache:
         self._entries: "OrderedDict[Tuple, CompileResult]" = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def lookup(self, key: Tuple) -> Optional[CompileResult]:
         got = self._entries.get(key)
         if got is None:
             self.misses += 1
+            get_tracer().counter("plan_cache.miss")
             return None
         self._entries.move_to_end(key)
         self.hits += 1
+        get_tracer().counter("plan_cache.hit")
         return got
 
     def store(self, key: Tuple, result: CompileResult) -> None:
@@ -179,11 +254,14 @@ class PlanCache:
         self._entries.move_to_end(key)
         while len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
+            self.evictions += 1
+            get_tracer().counter("plan_cache.evict")
 
     def clear(self) -> None:
         self._entries.clear()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -191,7 +269,7 @@ class PlanCache:
     @property
     def stats(self) -> Dict[str, int]:
         return {"hits": self.hits, "misses": self.misses,
-                "entries": len(self._entries)}
+                "evictions": self.evictions, "entries": len(self._entries)}
 
 
 #: process-wide default cache — repeated compiles of the same frontend
@@ -303,6 +381,44 @@ def compile(program: Program, target: str = "local", *,
     or path) persists plan metadata across processes; ``None`` falls back to
     the ``REPRO_PLAN_STORE`` environment default, ``False`` disables.
     """
+    tracer = get_tracer()
+    if not tracer.enabled:
+        return _compile_impl(
+            program, target, parallel=parallel, catalog=catalog,
+            use_kernels=use_kernels, fuse=fuse, axis=axis, mesh=mesh, jit=jit,
+            collectives=collectives, parallelize_targets=parallelize_targets,
+            optimize=optimize, strategy=strategy, cache=cache, store=store,
+            backend=backend, check=check)
+    with tracer.span(f"compile:{program.name}", cat="compile",
+                     target=target) as sp:
+        result = _compile_impl(
+            program, target, parallel=parallel, catalog=catalog,
+            use_kernels=use_kernels, fuse=fuse, axis=axis, mesh=mesh, jit=jit,
+            collectives=collectives, parallelize_targets=parallelize_targets,
+            optimize=optimize, strategy=strategy, cache=cache, store=store,
+            backend=backend, check=check)
+        sp.set(cache="hit" if result.cache_hit else "miss",
+               source=result.cache_source,
+               fingerprint=result.fingerprint[:12])
+    return result
+
+
+def _compile_impl(program: Program, target: str = "local", *,
+                  parallel: Optional[int] = None,
+                  catalog: Any = None,
+                  use_kernels: bool = False,
+                  fuse: bool = True,
+                  axis: str = "workers",
+                  mesh: Any = None,
+                  jit: bool = True,
+                  collectives: bool = True,
+                  parallelize_targets: Optional[Sequence[str]] = None,
+                  optimize: Optional[str] = None,
+                  strategy: Any = None,
+                  cache: Union[None, bool, PlanCache] = None,
+                  store: Any = None,
+                  backend: Any = None,
+                  check: bool = True) -> CompileResult:
     if optimize not in (None, "cost"):
         raise ValueError(f"unknown optimize mode {optimize!r}; "
                          "expected None or 'cost'")
@@ -331,7 +447,7 @@ def compile(program: Program, target: str = "local", *,
     if use_cache:
         hit = plan_cache.lookup(key)
         if hit is not None:
-            return replace(hit, cache_hit=True)
+            return replace(hit, cache_hit=True, cache_source="memory")
 
     plan_store = _resolve_store(store)
     store_key: Optional[str] = None
@@ -356,7 +472,8 @@ def compile(program: Program, target: str = "local", *,
 
     be = backend if backend is not None else tgt.make_backend(opts)
     t0 = time.perf_counter()
-    executable = be.compile(lowered)
+    with get_tracer().span(f"backend:{tgt.name}", cat="compile.backend"):
+        executable = be.compile(lowered)
     backend_s = time.perf_counter() - t0
 
     if decision is not None:
@@ -374,6 +491,9 @@ def compile(program: Program, target: str = "local", *,
         backend_s=backend_s,
         strategy=tuple(sorted(chosen.items())),
         decision=decision,
+        stats=opts.stats(),
+        cache_source=("store" if decision is not None
+                      and decision.source == "store" else "miss"),
     )
     if use_cache:
         plan_cache.store(key, result)

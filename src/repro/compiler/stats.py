@@ -32,7 +32,7 @@ from ..core.types import CollectionType, item_nbytes, is_coll
 
 __all__ = [
     "TableStats", "Statistics", "RegStats", "propagate", "stats_from_columns",
-    "DEFAULT_SELECTIVITY",
+    "DEFAULT_SELECTIVITY", "seq_chunks",
 ]
 
 #: fraction of rows assumed to survive a filter when the predicate is opaque
@@ -78,6 +78,15 @@ class TableStats:
                           tuple(sorted((k, (int(lo), int(hi)))
                                        for k, (lo, hi) in (domains or {}).items())))
 
+    def with_rows(self, rows: int) -> "TableStats":
+        """An *observed* copy: measured row count, everything else kept.
+
+        NDV caps ride along — a measured table can't have more distinct
+        values in a column than it has rows."""
+        rows = int(rows)
+        ndv = tuple((k, min(v, max(rows, 1))) for k, v in self.ndv)
+        return replace(self, rows=rows, ndv=ndv)
+
 
 @dataclass(frozen=True)
 class Statistics:
@@ -98,6 +107,18 @@ class Statistics:
     def cache_key(self) -> Tuple:
         return tuple((n, t.rows, t.bytes_per_row, t.ndv, t.domains)
                      for n, t in self.tables)
+
+    def with_observed_rows(self, rows: Mapping[str, int]) -> "Statistics":
+        """Fold measured base-table cardinalities (from traced executions —
+        see ``repro.obs.feedback``) into the catalog: measured row counts
+        override the estimates, tables the catalog never saw are added with
+        default per-row bytes, and NDV/domain knowledge is preserved."""
+        tables = {n: t for n, t in self.tables}
+        for name, n_rows in rows.items():
+            base = tables.get(name)
+            tables[name] = (base.with_rows(n_rows) if base is not None
+                            else TableStats(int(n_rows)))
+        return Statistics.make(tables)
 
 
 def stats_from_columns(columns: Mapping[str, Any]) -> TableStats:
@@ -185,6 +206,12 @@ def _seq_n(reg: Register) -> int:
         if n:
             return int(n)
     return 1
+
+
+def seq_chunks(reg: Register) -> int:
+    """Number of chunks of a split ``Seq[n]`` register (1 when unsplit) —
+    how per-chunk estimates scale to the global cardinality."""
+    return _seq_n(reg)
 
 
 # ---------------------------------------------------------------------------

@@ -27,6 +27,7 @@ import time
 from pathlib import Path
 from typing import Any, Dict, Optional, Union
 
+from ..obs.trace import get_tracer, warn_event
 from .cost import CostCalibration
 
 __all__ = ["PlanStore", "default_store"]
@@ -56,9 +57,19 @@ class PlanStore:
     def load_plan(self, key_hash: str) -> Optional[Dict[str, Any]]:
         path = self._plan_path(key_hash)
         try:
-            return json.loads(path.read_text())
-        except (OSError, ValueError):
+            record = json.loads(path.read_text())
+        except FileNotFoundError:
+            get_tracer().counter("plan_store.miss")
             return None
+        except (OSError, ValueError) as e:
+            # a present-but-unreadable record is data loss, not a miss —
+            # surface it instead of silently re-planning from scratch
+            get_tracer().counter("plan_store.corrupt")
+            warn_event("plan_store.corrupt", path=str(path),
+                       reason=f"{type(e).__name__}: {e}")
+            return None
+        get_tracer().counter("plan_store.hit")
+        return record
 
     def __len__(self) -> int:
         return sum(1 for p in self.root.glob("*.json")
@@ -69,7 +80,12 @@ class PlanStore:
         try:
             return CostCalibration.from_dict(
                 json.loads(self._calib_path.read_text()))
-        except (OSError, ValueError):
+        except FileNotFoundError:
+            return CostCalibration()
+        except (OSError, ValueError) as e:
+            get_tracer().counter("plan_store.corrupt")
+            warn_event("plan_store.corrupt", path=str(self._calib_path),
+                       reason=f"{type(e).__name__}: {e}")
             return CostCalibration()
 
     def save_calibration(self, calib: CostCalibration) -> None:

@@ -19,6 +19,7 @@ import numpy as np
 
 from ..configs import ARCH_IDS, get_config, get_reduced
 from ..models.api import build_model, make_serve_step
+from ..obs.trace import Tracer, get_tracer, set_tracer
 
 
 def main(argv=None):
@@ -30,7 +31,16 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--cache-cap", type=int, default=64)
+    ap.add_argument("--trace", nargs="?", const="trace__serve.json",
+                    default=None, metavar="PATH",
+                    help="enable tracing and write a Chrome trace "
+                         "(chrome://tracing / Perfetto) to PATH")
     args = ap.parse_args(argv)
+
+    previous_tracer = None
+    if args.trace:
+        previous_tracer = set_tracer(Tracer(enabled=True))
+    tracer = get_tracer()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg)
@@ -50,6 +60,10 @@ def main(argv=None):
         take = min(args.batch, args.requests - done)
         ids = list(range(done, done + take))
         bsz = args.batch
+        wave_t0 = time.perf_counter()
+        wave_span = tracer.span("serve.wave", cat="serve",
+                                requests=take, batch=bsz)
+        wave_span.__enter__()
 
         # build decode state for this wave
         if cfg.family == "encdec":
@@ -77,9 +91,30 @@ def main(argv=None):
         total_tokens += take * args.gen
         done += take
 
+        wave_dt = time.perf_counter() - wave_t0
+        wave_span.set(tokens=take * args.gen, wall_s=wave_dt)
+        wave_span.__exit__(None, None, None)
+        # every request in the wave shares its wall time (batched decode)
+        for _ in ids:
+            tracer.observe("serve.request_latency_s", wave_dt)
+        tracer.counter("serve.requests", take)
+        tracer.counter("serve.tokens", take * args.gen)
+        if wave_dt > 0:
+            tracer.observe("serve.tokens_per_s", take * args.gen / wave_dt)
+
     dt = time.time() - t0
     print(f"[serve] {args.requests} requests × {args.gen} tokens in {dt:.1f}s "
           f"→ {total_tokens/dt:.1f} tok/s (batch={args.batch})")
+    if args.trace:
+        from ..obs.export import write_chrome_trace
+
+        lat = tracer.histogram_summary("serve.request_latency_s") or {}
+        if lat:
+            print(f"[serve] request latency p50={lat['p50']:.3f}s "
+                  f"p99={lat['p99']:.3f}s over {int(lat['count'])} requests")
+        write_chrome_trace(args.trace, tracer)
+        print(f"[serve] chrome trace → {args.trace}")
+        set_tracer(previous_tracer)
     return outputs
 
 

@@ -1,0 +1,36 @@
+"""End-to-end observability for the CVM stack.
+
+Three pieces (see docs/observability.md):
+
+* :mod:`repro.obs.trace` — the span tracer, counters/histograms, the
+  process-global default (disabled by default, zero-overhead when off),
+  and structured warnings;
+* :mod:`repro.obs.export` — Chrome-trace JSON export
+  (``chrome://tracing`` / Perfetto) with the metrics dict embedded;
+* :mod:`repro.obs.feedback` — measured per-operator cardinalities joined
+  against the cost model's estimates (the estimate-vs-actual table in
+  ``CompileResult.explain()``), observed ``TableStats``, and the runtime
+  :data:`~repro.compiler.cost.EXEC_CALIBRATION` feed.
+"""
+
+from .export import chrome_trace, write_chrome_trace  # noqa: F401
+from .feedback import (  # noqa: F401
+    FEEDBACK,
+    TAPPED_OPS,
+    FeedbackCatalog,
+    OpObservation,
+    RuntimeProfile,
+    TapRecord,
+    build_profile,
+    tap_key,
+)
+from .trace import (  # noqa: F401
+    NULL_SPAN,
+    ObsWarning,
+    Span,
+    Tracer,
+    get_tracer,
+    set_tracer,
+    tracing,
+    warn_event,
+)

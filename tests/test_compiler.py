@@ -261,7 +261,8 @@ class TestPlanCache:
         assert not r1.cache_hit
         assert r2.cache_hit
         assert r2.executable is r1.executable  # the jitted plan is reused
-        assert cache.stats == {"hits": 1, "misses": 1, "entries": 1}
+        assert cache.stats == {"hits": 1, "misses": 1, "entries": 1,
+                               "evictions": 0}
 
     def test_option_changes_miss(self, sales_ctx):
         q = sales_query(sales_ctx)

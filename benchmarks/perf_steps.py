@@ -25,7 +25,9 @@ uploads per PR; --groupby-bench runs just the BENCH_5.json group-by
 strategy benchmark; --trace runs traced executions of the same cells →
 artifacts/perf_steps/trace__<cell>.json Chrome traces + BENCH_6.json with
 the per-op runtime breakdown, cardinality-miss stats, and the <5%
-tracing-disabled overhead guard.)
+tracing-disabled overhead guard; --robust-bench measures the guarded
+compile/execute path with no faults armed vs guard=False → BENCH_7.json
+with its own <5% overhead guard plus the fault-recovery wall time.)
 """
 
 import json
@@ -285,8 +287,93 @@ def trace_report(reps: int = 30):
     print(f"[perf] wrote {ROOT / 'BENCH_6.json'}")
 
 
+def robust_bench_report(reps: int = 30):
+    """Guarded-execution overhead with no faults armed → BENCH_7.json.
+
+    The robustness layer must be free when nothing fails: on the low-NDV
+    Q1-style hot path, a ``guard=True`` (default) compile+execute must stay
+    within 5% of ``guard=False`` — the armed exec guard is one attribute
+    check per call and every unarmed injection site is one list-truthiness
+    check.  Also records, informationally, the wall time to *recover* from
+    an injected backend-compile fault through the fallback ladder.
+    """
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import statistics
+    import warnings
+    import jax
+    from repro.compiler import PlanCache
+    from repro.robust.inject import inject
+
+    ctx, cells = _groupby_cells()
+    sources = ctx.sources()
+    q = cells["low_ndv_q1"][1]
+    record = {"bench": "guarded_execution_overhead", "reps": reps,
+              "cell": "low_ndv_q1"}
+
+    def median_call(fn):
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts.append(time.perf_counter() - t0)
+        return statistics.median(ts)
+
+    def median_compile(**kw):
+        ts = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            ctx.compile(q, cache=PlanCache(), **kw)
+            ts.append(time.perf_counter() - t0)
+        return statistics.median(ts)
+
+    guarded = ctx.compile(q, cache=PlanCache())            # guard defaults on
+    unguarded = ctx.compile(q, cache=PlanCache(), guard=False)
+    jax.block_until_ready(guarded(sources))                # warm + disarm
+    jax.block_until_ready(unguarded(sources))
+    guarded_s = median_call(lambda: guarded(sources))
+    unguarded_s = median_call(lambda: unguarded(sources))
+    ratio = guarded_s / unguarded_s
+    ok = ratio < 1.05
+    record["overhead_guard"] = {
+        "guarded_us": guarded_s * 1e6, "unguarded_us": unguarded_s * 1e6,
+        "ratio": ratio, "threshold": 1.05, "pass": ok,
+    }
+    record["compile_overhead"] = {
+        "guarded_ms": median_compile() * 1e3,
+        "unguarded_ms": median_compile(guard=False) * 1e3,
+    }
+    print(f"[perf] guards-enabled no-fault overhead: guarded "
+          f"{guarded_s * 1e6:.0f} us, unguarded {unguarded_s * 1e6:.0f} us "
+          f"→ ratio {ratio:.3f} ({'PASS' if ok else 'FAIL'} < 1.05)",
+          flush=True)
+
+    # informational: how long one trip down the fallback ladder costs
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        t0 = time.perf_counter()
+        with inject("backend.compile", mode="raise", times=1):
+            res = ctx.compile(q, cache=PlanCache())
+        jax.block_until_ready(res(sources))
+        recover_s = time.perf_counter() - t0
+    record["fault_recovery"] = {
+        "point": "backend.compile", "wall_s": recover_s,
+        "degraded": list(res.degraded),
+    }
+    print(f"[perf] fallback recovery (backend.compile fault): "
+          f"{recover_s * 1e3:.0f} ms via {' → '.join(res.degraded)}",
+          flush=True)
+
+    (ROOT / "BENCH_7.json").write_text(json.dumps(record, indent=2))
+    print(f"[perf] wrote {ROOT / 'BENCH_7.json'}")
+    return ok
+
+
 def main():
     OUT.mkdir(parents=True, exist_ok=True)
+    if "--robust-bench" in sys.argv:
+        if not robust_bench_report():
+            sys.exit(1)
+        return
     if "--trace" in sys.argv:
         trace_report()
         return

@@ -35,6 +35,8 @@ class ElasticExecutor:
     cache: Optional[Any] = None   # PlanCache override; None → driver default
     optimize: Optional[str] = None  # "cost" → costed strategy search per plan
     store: Any = None             # PlanStore/path: re-plans survive restarts
+    memory_budget: Optional[int] = None  # admission cap per plan (bytes)
+    guard: bool = True            # fallback-ladder protection on each plan
     # hot-path memo so steady-state run() skips the rebuild+fingerprint of a
     # driver-cache lookup; the driver cache still provides cross-topology and
     # cross-executor reuse
@@ -60,6 +62,8 @@ class ElasticExecutor:
             cache=self.cache,
             optimize=self.optimize,
             store=self.store,
+            memory_budget=self.memory_budget,
+            guard=self.guard,
         )
 
     def run(self, sources, *args):

@@ -29,6 +29,7 @@ from ..core.program import Program
 # registered pipeline stages now — re-exported here for compatibility.
 from ..core.passes.mesh_lower import LowerToMesh, PushCombineIntoMesh  # noqa: F401
 from ..relational.runtime import VecTable
+from ..robust.inject import maybe_inject
 from . import emit as base_emit
 from .emit import EvalCtx, evaluate_program
 
@@ -222,6 +223,7 @@ def _exchange(ctx, ins, args):
 
 
 def evaluate_spmd_program(ctx: EvalCtx, program: Program, *args: Any) -> List[Any]:
+    maybe_inject("spmd.shard", program=program.name)
     env: Dict[str, Any] = {r.name: v for r, v in zip(program.inputs, args)}
     for i, ins in enumerate(program.body):
         fn = _SPMD_EMIT.get(ins.opcode) or base_emit._EMIT.get(ins.opcode)

@@ -25,6 +25,9 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 from ..core.program import Program
 from ..core.verify import verify
 from ..obs.trace import get_tracer
+from ..robust.admission import AdmissionError, admit, default_budget
+from ..robust.fallback import degrade, fallback_ladder
+from ..robust.inject import InjectedFault, maybe_inject
 from .cost import CALIBRATION, Candidate, PlanDecision, estimate_cost
 from .fingerprint import fingerprint, fingerprint_value
 from .stats import Statistics
@@ -77,6 +80,8 @@ def run_passes(program: Program, passes: Sequence[Any], stage: str = "pipeline",
         with tracer.span(p.name, cat="compile.pass", stage=stage) as sp:
             out = p.apply(program)
         wall = time.perf_counter() - t0
+        out = maybe_inject("driver.pass", out, corrupt=_truncate_program,
+                           pass_name=p.name, stage=stage)
         after = program_size(out)
         sp.set(size_before=before, size_after=after)
         if check:
@@ -90,6 +95,14 @@ def run_passes(program: Program, passes: Sequence[Any], stage: str = "pipeline",
             records.append(PassRecord(stage, p.name, wall, before, after))
         program = out
     return program
+
+
+def _truncate_program(program: Program, rule: Any) -> Program:
+    """``driver.pass`` corruptor: drop the last instruction so verification
+    fails the way a buggy rewrite does (a result register goes undefined)."""
+    if not program.body:
+        raise InjectedFault("injected driver.pass corruption on empty program")
+    return replace(program, body=program.body[:-1])
 
 
 # ---------------------------------------------------------------------------
@@ -122,8 +135,32 @@ class CompileResult:
     #: latest traced execution's estimate-vs-actual profile
     #: (:class:`~repro.obs.feedback.RuntimeProfile`; None until a traced run)
     profile: Optional[Any] = None
+    #: fallback-ladder rungs this plan stepped down (compile- or exec-time);
+    #: empty means the cost-chosen plan is the plan that runs
+    degraded: Tuple[str, ...] = ()
+    #: resource-admission estimate (only computed when a byte budget is set)
+    resources: Optional[Any] = None
+    #: one-shot execution guard armed by the driver: catches the *first*
+    #: execution's failure and walks the fallback ladder (jit traces lazily,
+    #: so shard/trace-time faults surface here, not at backend compile).
+    #: Disarmed after the first successful call — the steady-state hot path
+    #: pays one attribute check.
+    _guard: Optional[Any] = None
 
     def __call__(self, sources: Any = None, *args: Any) -> Any:
+        guard = self._guard
+        if guard is None:
+            return self._dispatch(sources, *args)
+        try:
+            out = self._dispatch(sources, *args)
+        except Exception as e:
+            out = guard(self, e, sources, args)
+        self._guard = None
+        return out
+
+    def _dispatch(self, sources: Any = None, *args: Any) -> Any:
+        maybe_inject("backend.execute", target=self.target,
+                     program=self.source.name)
         tracer = get_tracer()
         runner = getattr(self.executable, "run_traced", None)
         if not tracer.enabled or runner is None:
@@ -169,6 +206,8 @@ class CompileResult:
         if self.strategy:
             head += (" strategy "
                      + ", ".join(f"{k}={v}" for k, v in self.strategy))
+        if self.degraded:
+            head += " DEGRADED via " + " → ".join(self.degraded)
         lines = [head,
                  "| stage | pass | wall ms | IR size | Δ |",
                  "|---|---|---:|---:|---:|"]
@@ -206,10 +245,14 @@ class CompileResult:
             "cache": "hit" if self.cache_hit else "miss",
             "cache_source": self.cache_source,
             "strategy": dict(self.strategy),
+            "degraded": list(self.degraded),
             "compile": {"total_s": self.total_s,
                         "backend_s": self.backend_s,
                         "passes": self.explain_records()},
         }
+        if self.resources is not None:
+            out["resources"] = {"peak_bytes": self.resources.peak_bytes,
+                                "peak_site": self.resources.peak_site}
         if self.decision is not None:
             out["decision"] = self.decision.records()
         if self.profile is not None:
@@ -257,6 +300,11 @@ class PlanCache:
             self.evictions += 1
             get_tracer().counter("plan_cache.evict")
 
+    def drop(self, key: Tuple) -> None:
+        """Invalidate one entry (a cached plan whose execution crashed must
+        not be served again — see the driver's fallback chain)."""
+        self._entries.pop(key, None)
+
     def clear(self) -> None:
         self._entries.clear()
         self.hits = 0
@@ -298,31 +346,41 @@ def _lower_with_strategy(program: Program, tgt: Any, opts: CompileOptions,
 
 def _choose_strategy(program: Program, tgt: Any, opts: CompileOptions,
                      check: bool, stored: Optional[Dict[str, Any]],
+                     poison: Any = frozenset(),
                      ) -> Tuple[Dict[str, str], Program, List[PassRecord],
                                 Optional[PlanDecision]]:
     """Cost-based plan selection: enumerate the target's Choice points,
     lower each candidate, cost the final programs, keep the cheapest.
 
     A plan-store record from a previous process short-circuits the search:
-    the recorded winner is re-lowered directly (source="store").
+    the recorded winner is re-lowered directly (source="store") — unless
+    that strategy is marked poison (its compiled plan crashed before), in
+    which case the search runs again over the surviving candidates.
+    Candidates over the admission byte budget are dropped the same way.
     """
     choices = tgt.choices()
     forced = dict(opts.strategy or ())
     stats = opts.stats()
+    budget = (opts.memory_budget if opts.memory_budget is not None
+              else default_budget())
 
     if stored is not None and stored.get("strategy"):
         chosen = {str(k): str(v) for k, v in stored["strategy"]}
         chosen.update(forced)
-        t0 = time.perf_counter()
-        lowered, records = _lower_with_strategy(program, tgt, opts, chosen,
-                                                check)
-        lower_s = time.perf_counter() - t0
-        cand = Candidate(strategy=tuple(sorted(chosen.items())),
-                         est_cost=estimate_cost(lowered, stats),
-                         size=program_size(lowered), lower_s=lower_s)
-        decision = PlanDecision(candidates=(cand,), chosen=0, source="store",
-                                est_seconds=CALIBRATION.seconds(cand.est_cost))
-        return chosen, lowered, records, decision
+        if tuple(sorted(chosen.items())) in poison:
+            get_tracer().counter("robust.fallback.poison_skip")
+        else:
+            t0 = time.perf_counter()
+            lowered, records = _lower_with_strategy(program, tgt, opts,
+                                                    chosen, check)
+            lower_s = time.perf_counter() - t0
+            cand = Candidate(strategy=tuple(sorted(chosen.items())),
+                             est_cost=estimate_cost(lowered, stats),
+                             size=program_size(lowered), lower_s=lower_s)
+            decision = PlanDecision(
+                candidates=(cand,), chosen=0, source="store",
+                est_seconds=CALIBRATION.seconds(cand.est_cost))
+            return chosen, lowered, records, decision
 
     axes = []
     for c in choices:
@@ -331,17 +389,36 @@ def _choose_strategy(program: Program, tgt: Any, opts: CompileOptions,
 
     candidates: List[Candidate] = []
     lowerings: List[Tuple[Program, List[PassRecord]]] = []
+    over_budget: List[Tuple[Any, Any]] = []
     for combo in itertools.product(*axes) if axes else [()]:
         chosen = dict(combo)
+        strat = tuple(sorted(chosen.items()))
+        if strat in poison:
+            get_tracer().counter("robust.fallback.poison_skip")
+            continue
         t0 = time.perf_counter()
         lowered, records = _lower_with_strategy(program, tgt, opts, chosen,
                                                 check)
         lower_s = time.perf_counter() - t0
+        if budget is not None:
+            try:
+                admit(lowered, budget, name=program.name)
+            except AdmissionError as e:
+                over_budget.append((strat, e))
+                continue
         candidates.append(Candidate(
-            strategy=tuple(sorted(chosen.items())),
+            strategy=strat,
             est_cost=estimate_cost(lowered, stats),
             size=program_size(lowered), lower_s=lower_s))
         lowerings.append((lowered, records))
+
+    if not candidates:
+        if over_budget:
+            raise over_budget[0][1]
+        raise RuntimeError(
+            f"no admissible candidate plan for {program.name!r} on target "
+            f"{tgt.name!r}: every strategy is poisoned "
+            f"({sorted(poison)})")
 
     best = min(range(len(candidates)), key=lambda i: candidates[i].est_cost)
     decision = PlanDecision(
@@ -366,7 +443,9 @@ def compile(program: Program, target: str = "local", *,
             cache: Union[None, bool, PlanCache] = None,
             store: Any = None,
             backend: Any = None,
-            check: bool = True) -> CompileResult:
+            check: bool = True,
+            memory_budget: Optional[int] = None,
+            guard: bool = True) -> CompileResult:
     """Compile a frontend CVM program for a registered target.
 
     ``cache``: ``None``/``True`` → the process-wide :data:`PLAN_CACHE`;
@@ -380,6 +459,17 @@ def compile(program: Program, target: str = "local", *,
     specific variants.  ``store`` (a :class:`~repro.compiler.store.PlanStore`
     or path) persists plan metadata across processes; ``None`` falls back to
     the ``REPRO_PLAN_STORE`` environment default, ``False`` disables.
+
+    ``memory_budget`` (bytes; default ``REPRO_MEM_BUDGET_BYTES``) turns on
+    resource admission: plans whose estimated peak working set exceeds the
+    budget are degraded or rejected before they can OOM the device.
+
+    ``guard`` (default on) arms the fallback chain: when the chosen plan
+    fails verification, lowering, backend compile, admission, or its first
+    execution, the driver retries progressively safer strategies and
+    finally the interp target, emitting a ``DegradedWarning`` instead of
+    failing the query (see docs/robustness.md).  Invalid *inputs* — unknown
+    targets, malformed strategies, impossible meshes — still raise.
     """
     tracer = get_tracer()
     if not tracer.enabled:
@@ -388,7 +478,8 @@ def compile(program: Program, target: str = "local", *,
             use_kernels=use_kernels, fuse=fuse, axis=axis, mesh=mesh, jit=jit,
             collectives=collectives, parallelize_targets=parallelize_targets,
             optimize=optimize, strategy=strategy, cache=cache, store=store,
-            backend=backend, check=check)
+            backend=backend, check=check, memory_budget=memory_budget,
+            guard=guard)
     with tracer.span(f"compile:{program.name}", cat="compile",
                      target=target) as sp:
         result = _compile_impl(
@@ -396,11 +487,19 @@ def compile(program: Program, target: str = "local", *,
             use_kernels=use_kernels, fuse=fuse, axis=axis, mesh=mesh, jit=jit,
             collectives=collectives, parallelize_targets=parallelize_targets,
             optimize=optimize, strategy=strategy, cache=cache, store=store,
-            backend=backend, check=check)
+            backend=backend, check=check, memory_budget=memory_budget,
+            guard=guard)
         sp.set(cache="hit" if result.cache_hit else "miss",
                source=result.cache_source,
                fingerprint=result.fingerprint[:12])
+        if result.degraded:
+            sp.set(degraded=list(result.degraded))
     return result
+
+
+class _PoisonedPlan(RuntimeError):
+    """The requested strategy is quarantined: its compiled plan crashed
+    before (plan-store poison mark) and must not be replayed from cache."""
 
 
 def _compile_impl(program: Program, target: str = "local", *,
@@ -418,7 +517,9 @@ def _compile_impl(program: Program, target: str = "local", *,
                   cache: Union[None, bool, PlanCache] = None,
                   store: Any = None,
                   backend: Any = None,
-                  check: bool = True) -> CompileResult:
+                  check: bool = True,
+                  memory_budget: Optional[int] = None,
+                  guard: bool = True) -> CompileResult:
     if optimize not in (None, "cost"):
         raise ValueError(f"unknown optimize mode {optimize!r}; "
                          "expected None or 'cost'")
@@ -430,6 +531,7 @@ def _compile_impl(program: Program, target: str = "local", *,
         parallelize_targets=(tuple(sorted(parallelize_targets))
                              if parallelize_targets else None),
         optimize=optimize, strategy=strat,
+        memory_budget=memory_budget,
     )
     _check_parallel_divides(program, opts)
     _check_mesh_available(tgt, opts)
@@ -451,26 +553,72 @@ def _compile_impl(program: Program, target: str = "local", *,
 
     plan_store = _resolve_store(store)
     store_key: Optional[str] = None
+    stored: Optional[Dict[str, Any]] = None
     if plan_store is not None:
         store_key = fingerprint_value(key)
         _seed_calibration(plan_store)
+        stored = plan_store.load_plan(store_key)
+    poison = (plan_store.poisoned_strategies(stored)
+              if plan_store is not None else set())
 
+    attempt: Dict[str, Any] = {}
+    try:
+        result = _build_plan(program, tgt, opts, check, backend, fp, stored,
+                             poison, plan_store, store_key, attempt)
+    except Exception as e:
+        if not guard:
+            raise
+        result = _fallback_compile(program, tgt, opts, check, backend, fp, e,
+                                   attempt, plan_store, store_key, poison)
+    if use_cache:
+        plan_cache.store(key, result)
+    if guard:
+        result._guard = _make_exec_guard(
+            program, tgt, opts, check, backend, fp, plan_store, store_key,
+            plan_cache if use_cache else None, key)
+    return result
+
+
+def _build_plan(program: Program, tgt: Any, opts: CompileOptions, check: bool,
+                backend: Any, fp: str, stored: Optional[Dict[str, Any]],
+                poison: Any, plan_store: Any, store_key: Optional[str],
+                attempt: Dict[str, Any]) -> CompileResult:
+    """One compile attempt down a fixed or costed path.
+
+    ``attempt`` is filled with the chosen strategy as soon as it is known,
+    so the fallback chain can poison the right plan when this raises.
+    """
     decision: Optional[PlanDecision] = None
-    if optimize == "cost" and tgt.choices():
-        stored = (plan_store.load_plan(store_key)
-                  if plan_store is not None else None)
+    budget = (opts.memory_budget if opts.memory_budget is not None
+              else default_budget())
+    if opts.optimize == "cost" and tgt.choices():
         chosen, lowered, records, decision = _choose_strategy(
-            program, tgt, opts, check, stored)
+            program, tgt, opts, check, stored, poison)
+        attempt["strategy"] = tuple(sorted(chosen.items()))
     else:
         chosen = dict(opts.strategy or ())
         for c in tgt.choices():
             chosen.setdefault(c.name, c.default)
+        strat_t = tuple(sorted(chosen.items()))
+        attempt["strategy"] = strat_t
+        if tgt.choices() and strat_t in poison:
+            get_tracer().counter("robust.fallback.poison_skip")
+            raise _PoisonedPlan(
+                f"strategy {dict(strat_t)} for {program.name!r} is "
+                f"quarantined (a previous compiled plan crashed)")
         lowered, records = _lower_with_strategy(program, tgt, opts, chosen,
                                                 check)
 
     _check_flavors(lowered, tgt)
 
+    resources = None
+    if budget is not None:
+        # the costed search already admitted its winner; fixed paths and
+        # store replays are admitted here, before the backend allocates
+        resources = admit(lowered, budget, name=program.name)
+
     be = backend if backend is not None else tgt.make_backend(opts)
+    maybe_inject("backend.compile", target=tgt.name, program=program.name)
     t0 = time.perf_counter()
     with get_tracer().span(f"backend:{tgt.name}", cat="compile.backend"):
         executable = be.compile(lowered)
@@ -494,15 +642,14 @@ def _compile_impl(program: Program, target: str = "local", *,
         stats=opts.stats(),
         cache_source=("store" if decision is not None
                       and decision.source == "store" else "miss"),
+        resources=resources,
     )
-    if use_cache:
-        plan_cache.store(key, result)
     if plan_store is not None and store_key is not None and backend is None:
         plan_store.save_plan(store_key, {
             "target": tgt.name,
             "fingerprint": fp,
             "strategy": sorted(chosen.items()),
-            "optimize": optimize,
+            "optimize": opts.optimize,
             "records": result.explain_records(),
             "decision": decision.records() if decision is not None else None,
             "backend_s": backend_s,
@@ -512,6 +659,172 @@ def _compile_impl(program: Program, target: str = "local", *,
         if decision is not None and CALIBRATION.n:
             plan_store.save_calibration(CALIBRATION)
     return result
+
+
+# ---------------------------------------------------------------------------
+# the fallback chain (see docs/robustness.md)
+# ---------------------------------------------------------------------------
+
+
+def _mark_poison(plan_store: Any, store_key: Optional[str],
+                 strategy: Any, reason: str) -> None:
+    if plan_store is None or not store_key or not strategy:
+        return
+    plan_store.mark_poison(store_key, tuple(strategy), reason=reason)
+
+
+def _fallback_compile(program: Program, tgt: Any, opts: CompileOptions,
+                      check: bool, backend: Any, fp: str,
+                      error: BaseException, attempt: Dict[str, Any],
+                      plan_store: Any, store_key: Optional[str],
+                      poison: Any) -> CompileResult:
+    """Walk the fallback ladder after a compile-time plan failure."""
+    chosen = dict(attempt.get("strategy") or ())
+    if not chosen:
+        for c in tgt.choices():
+            chosen.setdefault(c.name, c.default)
+    if not isinstance(error, _PoisonedPlan):
+        _mark_poison(plan_store, store_key, sorted(chosen.items()),
+                     f"compile: {type(error).__name__}: {error}")
+    last: BaseException = error
+    walked: List[str] = []
+    names = [c.name for c in tgt.choices()]
+    for rung, forced in fallback_ladder(chosen, names):
+        walked.append(rung)
+        degrade(rung, program=program.name, target=tgt.name,
+                reason="compile", error=last)
+        try:
+            if forced is None:
+                result = _interp_fallback(program, fp, check)
+            else:
+                opts2 = replace(opts, strategy=tuple(sorted(forced.items())),
+                                optimize=None)
+                result = _build_plan(program, tgt, opts2, check, backend, fp,
+                                     None, poison, plan_store, store_key, {})
+        except Exception as e:
+            last = e
+            if forced is not None and not isinstance(e, _PoisonedPlan):
+                _mark_poison(plan_store, store_key, sorted(forced.items()),
+                             f"compile {rung}: {type(e).__name__}: {e}")
+            continue
+        result.degraded = tuple(walked)
+        get_tracer().counter("robust.fallback.recovered")
+        return result
+    raise last
+
+
+def _make_exec_guard(program: Program, tgt: Any, opts: CompileOptions,
+                     check: bool, backend: Any, fp: str, plan_store: Any,
+                     store_key: Optional[str],
+                     plan_cache: Optional[PlanCache], key: Tuple):
+    """The one-shot first-execution guard armed on guarded CompileResults.
+
+    jit traces lazily, so shard bodies and backend codegen only run at the
+    first call — a plan that compiled fine can still die there.  The guard
+    poisons the crashed plan, invalidates its cache entry, walks the same
+    ladder as the compile-time chain, *executes* each rung's plan on the
+    caller's sources, and splices the surviving plan into the caller's
+    CompileResult handle.
+    """
+
+    def exec_guard(result: CompileResult, error: BaseException,
+                   sources: Any, args: Tuple) -> Any:
+        if plan_cache is not None:
+            plan_cache.drop(key)
+        _mark_poison(plan_store, store_key, result.strategy,
+                     f"execute: {type(error).__name__}: {error}")
+        last: BaseException = error
+        walked: List[str] = []
+        names = [c.name for c in tgt.choices()]
+        for rung, forced in fallback_ladder(dict(result.strategy), names):
+            walked.append(rung)
+            degrade(rung, program=program.name, target=result.target,
+                    reason="execute", error=last)
+            try:
+                if forced is None:
+                    nxt = _interp_fallback(program, fp, check)
+                else:
+                    opts2 = replace(opts,
+                                    strategy=tuple(sorted(forced.items())),
+                                    optimize=None)
+                    nxt = _build_plan(program, tgt, opts2, check, backend,
+                                      fp, None, frozenset(), None, None, {})
+                out = nxt._dispatch(sources, *args)
+            except Exception as e:
+                last = e
+                if forced is not None:
+                    _mark_poison(plan_store, store_key,
+                                 sorted(forced.items()),
+                                 f"execute {rung}: {type(e).__name__}: {e}")
+                continue
+            # splice the surviving plan into the caller's handle — later
+            # calls dispatch straight to the safe executable
+            result.target = nxt.target
+            result.program = nxt.program
+            result.executable = nxt.executable
+            result.strategy = nxt.strategy
+            result.profile = nxt.profile
+            result.degraded = result.degraded + tuple(walked)
+            get_tracer().counter("robust.fallback.recovered")
+            if plan_cache is not None:
+                plan_cache.store(key, replace(result, cache_hit=False,
+                                              cache_source="miss",
+                                              _guard=None))
+            return out
+        raise last
+
+    return exec_guard
+
+
+class _NumpySourceAdapter:
+    """Adapts VecTable sources to the interp backend's numpy-dict model.
+
+    The fallback chain's terminal rung re-targets a query at interp, but
+    the caller already passed the sources the *original* target consumes
+    (``source_kind="vec"`` → VecTables).  This shim converts at dispatch so
+    the degraded plan is a drop-in replacement.
+    """
+
+    emits_op_spans = True
+
+    def __init__(self, inner: Any) -> None:
+        self.inner = inner
+        self.program = getattr(inner, "program", None)
+
+    @staticmethod
+    def _convert(sources: Any) -> Any:
+        if sources is None:
+            return None
+        return {k: (v.to_numpy() if hasattr(v, "to_numpy") else v)
+                for k, v in dict(sources).items()}
+
+    def __call__(self, sources: Any = None, *args: Any) -> Any:
+        return self.inner(self._convert(sources), *args)
+
+    def run_traced(self, sources: Any = None, *args: Any) -> Any:
+        return self.inner.run_traced(self._convert(sources), *args)
+
+
+def _interp_fallback(program: Program, fp: str, check: bool) -> CompileResult:
+    """The terminal rung: compile ``program`` for the reference interpreter."""
+    it = get_target("interp")
+    iopts = CompileOptions()
+    lowered, records = _lower_with_strategy(program, it, iopts, {}, check)
+    be = it.make_backend(iopts)
+    maybe_inject("backend.compile", target="interp", program=program.name)
+    t0 = time.perf_counter()
+    with get_tracer().span("backend:interp", cat="compile.backend"):
+        executable = be.compile(lowered)
+    backend_s = time.perf_counter() - t0
+    return CompileResult(
+        target="interp",
+        source=program,
+        program=lowered,
+        executable=_NumpySourceAdapter(executable),
+        records=tuple(records),
+        fingerprint=fp,
+        backend_s=backend_s,
+    )
 
 
 def _normalize_strategy(strategy: Any, tgt: Any,

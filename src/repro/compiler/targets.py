@@ -67,6 +67,10 @@ class CompileOptions:
     #: explicit strategy overrides ((choice-name, label), ...) — forces
     #: specific variants regardless of the optimizer
     strategy: Optional[Tuple[Tuple[str, str], ...]] = None
+    #: resource-admission byte budget for the plan's estimated peak working
+    #: set (see ``repro.robust.admission``); None → the
+    #: ``REPRO_MEM_BUDGET_BYTES`` environment default (off when unset)
+    memory_budget: Optional[int] = None
 
     def stats(self):
         return self.catalog.stats if self.catalog is not None else None
@@ -93,7 +97,8 @@ class CompileOptions:
             mesh_key = (axis_names, shape, dev_ids)
         return (self.parallel, self.use_kernels, self.fuse, self.axis,
                 self.jit, self.collectives, self.parallelize_targets,
-                cat, mesh_key, self.optimize, self.strategy)
+                cat, mesh_key, self.optimize, self.strategy,
+                self.memory_budget)
 
 
 # ---------------------------------------------------------------------------

@@ -147,6 +147,7 @@ class LowerRelToVec:
             aggs = tuple(params["aggs"])
             if self.groupby == "direct":
                 domains = self._reg_domains(src_program, ins.inputs[0], keys)
+                n_buckets = None
                 if domains is not None:
                     n_buckets = 1
                     for lo, hi in domains:
@@ -157,7 +158,18 @@ class LowerRelToVec:
                             "key_domains": domains, "num_buckets": n_buckets,
                         })
                 # unbounded / oversized key domain: the sorted tier is the
-                # always-valid fallback
+                # always-valid fallback — but the caller asked for direct, so
+                # the downgrade is surfaced instead of happening silently
+                from ...obs.trace import warn_event
+                warn_event(
+                    "lower_vec.direct_unavailable",
+                    keys=",".join(keys),
+                    num_buckets=n_buckets if n_buckets is not None else -1,
+                    max_buckets=MAX_DIRECT_BUCKETS,
+                    reason=("unbounded key domain" if domains is None
+                            else f"key domain too large ({n_buckets:,} buckets"
+                                 f" > {MAX_DIRECT_BUCKETS:,})"),
+                )
             s = b.emit1("vec.SortByKey", inputs, {"keys": keys})
             return b.emit("vec.GroupAggSorted", [s], {
                 "keys": keys, "aggs": aggs, "max_groups": mg,

@@ -6,7 +6,8 @@ from the step callable.  The runner implements the standard production
 policy around them:
 
   * **checkpoint cadence** + restore-on-failure (bounded retries);
-  * **straggler detection**: EWMA of step time; a step slower than
+  * **straggler detection**: EWMA of step time via
+    :class:`repro.robust.retry.StragglerDetector`; a step slower than
     ``straggler_factor``× the EWMA is logged and counted — the hook where a
     real deployment triggers pre-emptive re-sharding or backup workers;
   * **elastic resize**: on ``ElasticEvent`` the caller re-builds the mesh
@@ -21,6 +22,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from ..robust.retry import StragglerDetector
 from .checkpoint import CheckpointManager
 
 
@@ -51,7 +53,8 @@ class StepRunner:
             num_steps: int = 100,
             on_failure: Optional[Callable[[int, Exception], None]] = None):
         """Drive ``num_steps`` steps with checkpointing + retry-restore."""
-        ewma = None
+        detector = StragglerDetector(factor=self.straggler_factor,
+                                     alpha=self.ewma_alpha)
         step = start_step
         retries = 0
         it = iter(batches)
@@ -74,10 +77,9 @@ class StepRunner:
                 continue
             retries = 0
             dt = time.time() - t0
-            straggler = ewma is not None and dt > self.straggler_factor * ewma
+            straggler = detector.observe(dt)
             if straggler:
                 self.stragglers += 1
-            ewma = dt if ewma is None else (1 - self.ewma_alpha) * ewma + self.ewma_alpha * dt
             loss = None
             if isinstance(metrics, dict) and "loss" in metrics:
                 loss = float(metrics["loss"])

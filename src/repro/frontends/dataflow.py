@@ -262,7 +262,9 @@ class Context:
     def compile(self, frame: Frame, parallel: Optional[int] = None,
                 use_kernels: bool = False, fuse: bool = True, backend: Any = None,
                 target: str = "local", cache: Any = None,
-                optimize: Optional[str] = None, strategy: Any = None):
+                optimize: Optional[str] = None, strategy: Any = None,
+                store: Any = None, memory_budget: Optional[int] = None,
+                guard: bool = True):
         """Compile through the unified driver — the single entry point for
         every target's declarative lowering path (and the plan cache)."""
         from ..compiler import compile as cvm_compile
@@ -281,6 +283,9 @@ class Context:
             cache=cache,
             optimize=optimize,
             strategy=strategy,
+            store=store,
+            memory_budget=memory_budget,
+            guard=guard,
         )
 
     def sources(self) -> Dict[str, Any]:

@@ -1,8 +1,25 @@
-"""Serving driver: batched decode with a functional KV cache.
+"""Serving driver: batched decode with a functional KV cache + load shedding.
 
 Continuous-batching-style loop: a request pool keeps the decode batch full;
 finished sequences (EOS or length budget) are swapped out and their slots
-re-prefilled.  On the CPU container use reduced configs::
+re-prefilled.  Admission control sits in front of the decode loop:
+
+  * requests enter a **bounded queue** (``--queue-cap``) — arrivals beyond
+    the cap are shed immediately (``serve.shed.queue_full``) instead of
+    growing an unbounded backlog;
+  * each request carries an optional **deadline** (``--deadline-s``); a
+    request whose deadline has already passed when its wave forms is shed
+    (``serve.shed.deadline``) rather than burning decode steps on an answer
+    nobody is waiting for;
+  * a wave that keeps failing after bounded retries sheds its requests
+    (``serve.shed.error``) and the loop moves on — a poison batch cannot
+    wedge the server.
+
+The loop itself (:func:`serve_loop`) is model-free: it drives any
+``run_wave(requests) -> {rid: output}`` callable, which is what the chaos
+tests exercise with injected slow/failing steps (``serve.step``).
+
+On the CPU container use reduced configs::
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
         --requests 16 --batch 4 --gen 16
@@ -12,18 +29,159 @@ from __future__ import annotations
 
 import argparse
 import time
+from collections import deque
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Dict, Iterable, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..configs import ARCH_IDS, get_config, get_reduced
-from ..models.api import build_model, make_serve_step
 from ..obs.trace import Tracer, get_tracer, set_tracer
+from ..robust.inject import maybe_inject
+from ..robust.retry import Deadline, RetryPolicy, call_with_retry
+
+#: bounded retries for a failing decode wave before its requests are shed
+WAVE_RETRY = RetryPolicy(max_retries=2, backoff_s=0.01)
+
+
+@dataclass(frozen=True)
+class Request:
+    """One generation request: a prompt and an optional deadline."""
+
+    rid: int
+    prompt: Any
+    deadline: Optional[Deadline] = None
+
+
+@dataclass
+class ShedStats:
+    """Why requests were dropped instead of served."""
+
+    queue_full: int = 0
+    deadline: int = 0
+    error: int = 0
+
+    @property
+    def total(self) -> int:
+        return self.queue_full + self.deadline + self.error
+
+
+class AdmissionQueue:
+    """Bounded FIFO with deadline-aware dequeue.
+
+    ``offer`` rejects (sheds) when the queue is at capacity; ``take`` skips
+    (sheds) requests whose deadline already passed.  Both bump the
+    ``serve.shed`` counter plus a per-reason counter, so the ``--trace``
+    metrics dump shows not just *that* load was shed but *why*.
+    """
+
+    def __init__(self, cap: Optional[int] = None) -> None:
+        self.cap = cap
+        self.shed = ShedStats()
+        self._q: deque = deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def offer(self, req: Request) -> bool:
+        if self.cap is not None and len(self._q) >= self.cap:
+            self.shed.queue_full += 1
+            tracer = get_tracer()
+            tracer.counter("serve.shed")
+            tracer.counter("serve.shed.queue_full")
+            return False
+        self._q.append(req)
+        return True
+
+    def take(self, n: int) -> List[Request]:
+        out: List[Request] = []
+        while self._q and len(out) < n:
+            req = self._q.popleft()
+            if req.deadline is not None and req.deadline.expired():
+                self._shed_deadline(req)
+                continue
+            out.append(req)
+        return out
+
+    def shed_expired(self, wave: List[Request]) -> List[Request]:
+        """Drop already-expired requests from a formed wave (post-delay)."""
+        keep: List[Request] = []
+        for req in wave:
+            if req.deadline is not None and req.deadline.expired():
+                self._shed_deadline(req)
+            else:
+                keep.append(req)
+        return keep
+
+    def _shed_deadline(self, req: Request) -> None:
+        self.shed.deadline += 1
+        tracer = get_tracer()
+        tracer.counter("serve.shed")
+        tracer.counter("serve.shed.deadline")
+        tracer.event("serve.shed.deadline", rid=req.rid)
+
+
+def serve_loop(requests: Iterable[Request],
+               run_wave: Callable[[List[Request]], Dict[int, Any]],
+               *,
+               batch: int,
+               queue_cap: Optional[int] = None,
+               deadline_s: Optional[float] = None,
+               retry: RetryPolicy = WAVE_RETRY,
+               ) -> Dict[int, Any]:
+    """Admission-controlled wave loop; returns ``{rid: output}`` for the
+    requests that were actually served (shed requests are absent).
+
+    Termination is structural: every admitted request is either served,
+    shed on deadline, or shed after bounded wave retries — the loop cannot
+    spin on a request it will never finish.
+    """
+    tracer = get_tracer()
+    queue = AdmissionQueue(queue_cap)
+    outputs: Dict[int, Any] = {}
+    for req in requests:
+        if deadline_s is not None and req.deadline is None:
+            req = replace(req, deadline=Deadline.after(deadline_s))
+        queue.offer(req)
+
+    while len(queue):
+        wave = queue.take(batch)
+        if not wave:
+            continue  # everything taken was past deadline; re-check queue
+        wave_t0 = time.perf_counter()
+        with tracer.span("serve.wave", cat="serve", requests=len(wave),
+                         batch=batch) as wave_span:
+            # fault-injection point: "raise" fails the wave (retried, then
+            # shed), "delay" slows it so queued deadlines expire
+            def attempt() -> Dict[int, Any]:
+                maybe_inject("serve.step", batch=len(wave))
+                # mutate in place: a request shed on one attempt must not be
+                # re-shed (re-counted) by a retry
+                wave[:] = queue.shed_expired(wave)
+                return run_wave(wave) if wave else {}
+
+            try:
+                got = call_with_retry(attempt, retry, name="serve.step")
+            except Exception as e:
+                queue.shed.error += len(wave)
+                tracer.counter("serve.shed", len(wave))
+                tracer.counter("serve.shed.error", len(wave))
+                tracer.event("serve.wave_failed", requests=len(wave),
+                             error=f"{type(e).__name__}: {e}")
+                continue
+            outputs.update(got)
+            wave_dt = time.perf_counter() - wave_t0
+            wave_span.set(served=len(got), wall_s=wave_dt)
+        # every request in the wave shares its wall time (batched decode)
+        for _ in got:
+            tracer.observe("serve.request_latency_s", wave_dt)
+        tracer.counter("serve.requests", len(got))
+    return outputs
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    from ..configs import ARCH_IDS
+
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2-1.5b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=16)
@@ -31,11 +189,23 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--cache-cap", type=int, default=64)
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline; requests still queued past "
+                         "it are shed instead of decoded")
+    ap.add_argument("--queue-cap", type=int, default=None,
+                    help="bound the admission queue; arrivals beyond the "
+                         "cap are shed immediately")
     ap.add_argument("--trace", nargs="?", const="trace__serve.json",
                     default=None, metavar="PATH",
                     help="enable tracing and write a Chrome trace "
                          "(chrome://tracing / Perfetto) to PATH")
     args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+
+    from ..configs import get_config, get_reduced
+    from ..models.api import build_model, make_serve_step
 
     previous_tracer = None
     if args.trace:
@@ -51,32 +221,24 @@ def main(argv=None):
 
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab, (args.requests, args.prompt_len))
+    requests = [Request(rid=i, prompt=prompts[i]) for i in range(args.requests)]
 
-    done = 0
-    total_tokens = 0
-    outputs = {}
-    t0 = time.time()
-    while done < args.requests:
-        take = min(args.batch, args.requests - done)
-        ids = list(range(done, done + take))
+    def run_wave(wave: List[Request]) -> Dict[int, Any]:
+        take = len(wave)
         bsz = args.batch
-        wave_t0 = time.perf_counter()
-        wave_span = tracer.span("serve.wave", cat="serve",
-                                requests=take, batch=bsz)
-        wave_span.__enter__()
+        # waves survive shedding, so request ids need not be contiguous
+        toks = np.zeros((bsz, args.prompt_len), np.int32)
+        toks[:take] = np.stack([r.prompt for r in wave]).astype(np.int32)
 
-        # build decode state for this wave
         if cfg.family == "encdec":
-            frames = jnp.asarray(rng.normal(size=(bsz, args.prompt_len, cfg.d_model)),
-                                 jnp.float32)
+            frames = jnp.asarray(
+                rng.normal(size=(bsz, args.prompt_len, cfg.d_model)),
+                jnp.float32)
             state = model.prefill(params, {"frames": frames}, args.cache_cap)
             tok = jnp.zeros((bsz, 1), jnp.int32)
-        elif cfg.family in ("dense", "moe", "vlm") and model.prefill is not None \
-                and cfg.family != "vlm":
-            pad = np.zeros((bsz - take, args.prompt_len), np.int32)
-            toks = np.concatenate([prompts[ids[0]:ids[0] + take], pad]).astype(np.int32)
-            logits, state = model.prefill(params, {"tokens": jnp.asarray(toks)},
-                                          args.cache_cap)
+        elif cfg.family in ("dense", "moe") and model.prefill is not None:
+            logits, state = model.prefill(
+                params, {"tokens": jnp.asarray(toks)}, args.cache_cap)
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         else:
             state = model.init_state(bsz, args.cache_cap)
@@ -86,25 +248,19 @@ def main(argv=None):
         for i in range(args.gen):
             tok, logits, state = serve(params, state, tok)
             gen[:, i] = np.asarray(tok[:, 0])
-        for j, rid in enumerate(ids):
-            outputs[rid] = gen[j]
-        total_tokens += take * args.gen
-        done += take
-
-        wave_dt = time.perf_counter() - wave_t0
-        wave_span.set(tokens=take * args.gen, wall_s=wave_dt)
-        wave_span.__exit__(None, None, None)
-        # every request in the wave shares its wall time (batched decode)
-        for _ in ids:
-            tracer.observe("serve.request_latency_s", wave_dt)
-        tracer.counter("serve.requests", take)
         tracer.counter("serve.tokens", take * args.gen)
-        if wave_dt > 0:
-            tracer.observe("serve.tokens_per_s", take * args.gen / wave_dt)
+        return {r.rid: gen[j] for j, r in enumerate(wave)}
 
+    t0 = time.time()
+    outputs = serve_loop(requests, run_wave, batch=args.batch,
+                         queue_cap=args.queue_cap,
+                         deadline_s=args.deadline_s)
     dt = time.time() - t0
-    print(f"[serve] {args.requests} requests × {args.gen} tokens in {dt:.1f}s "
-          f"→ {total_tokens/dt:.1f} tok/s (batch={args.batch})")
+    total_tokens = len(outputs) * args.gen
+    shed = args.requests - len(outputs)
+    print(f"[serve] {len(outputs)}/{args.requests} requests × {args.gen} "
+          f"tokens in {dt:.1f}s → {total_tokens/max(dt, 1e-9):.1f} tok/s "
+          f"(batch={args.batch}, shed={shed})")
     if args.trace:
         from ..obs.export import write_chrome_trace
 

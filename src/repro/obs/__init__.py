@@ -26,6 +26,7 @@ from .feedback import (  # noqa: F401
 )
 from .trace import (  # noqa: F401
     NULL_SPAN,
+    DegradedWarning,
     ObsWarning,
     Span,
     Tracer,

@@ -26,9 +26,11 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Mapping, Optional, Tuple
 
-from ..compiler.cost import EXEC_CALIBRATION, estimate_cost
-from ..compiler.stats import propagate, seq_chunks
 from .trace import get_tracer
+
+# NOTE: repro.compiler imports (cost, stats) are deferred to call sites —
+# the compilation driver depends on repro.robust which depends on repro.obs,
+# so a module-level compiler import here would close an import cycle.
 
 __all__ = [
     "TAPPED_OPS", "tap_key", "TapRecord", "OpObservation", "RuntimeProfile",
@@ -165,6 +167,9 @@ def build_profile(result: Any, cards: Mapping[str, TapRecord], wall_s: float,
     were collected from ``result.program`` (the exact program the backend
     executed), so estimates and measurements line up by construction.
     """
+    from ..compiler.cost import estimate_cost
+    from ..compiler.stats import propagate, seq_chunks
+
     program = result.program
     stats = getattr(result, "stats", None)
     env = propagate(program, stats)
@@ -241,6 +246,8 @@ class FeedbackCatalog:
             while len(self.profiles) > self.max_profiles:
                 self.profiles.popitem(last=False)
         if profile.est_cost > 0 and profile.wall_s > 0:
+            from ..compiler.cost import EXEC_CALIBRATION
+
             # abstract plan-cost units → measured execution seconds: the
             # runtime sibling of the compile-time CALIBRATION EMA
             EXEC_CALIBRATION.update(profile.est_cost, profile.wall_s)

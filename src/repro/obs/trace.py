@@ -33,13 +33,23 @@ import warnings
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 __all__ = [
-    "Span", "Tracer", "ObsWarning",
+    "Span", "Tracer", "ObsWarning", "DegradedWarning",
     "get_tracer", "set_tracer", "tracing", "warn_event",
 ]
 
 
 class ObsWarning(UserWarning):
     """Structured warning raised through the observability layer."""
+
+
+class DegradedWarning(ObsWarning):
+    """The plan that ran is not the plan that was chosen.
+
+    Raised by the driver's fallback chain (``repro.robust.fallback``) when a
+    cost-chosen candidate failed and a safer variant — or the interp tier —
+    answered the query instead.  Catch it (or filter it) to detect degraded
+    service; the paired ``robust.fallback.*`` counters carry the same signal
+    into metrics."""
 
 
 # ---------------------------------------------------------------------------
@@ -273,17 +283,17 @@ def tracing(enabled: bool = True, max_events: int = 100_000) -> _TracingContext:
 # ---------------------------------------------------------------------------
 
 
-def warn_event(code: str, **fields: Any) -> None:
+def warn_event(code: str, category: type = ObsWarning, **fields: Any) -> None:
     """Emit a structured warning through the obs layer.
 
-    Always raises a Python :class:`ObsWarning` (so the condition is visible
-    even with tracing off — nothing is silently swallowed); when tracing is
-    on, the same record lands in the trace as an event and bumps the
-    ``warnings.<code>`` counter.
+    Always raises a Python warning of ``category`` (an :class:`ObsWarning`
+    subclass — so the condition is visible even with tracing off; nothing is
+    silently swallowed); when tracing is on, the same record lands in the
+    trace as an event and bumps the ``warnings.<code>`` counter.
     """
     tracer = get_tracer()
     tracer.event(code, **fields)
     tracer.counter(f"warnings.{code}")
     detail = " ".join(f"{k}={v}" for k, v in sorted(fields.items()))
-    warnings.warn(f"{code}: {detail}" if detail else code, ObsWarning,
+    warnings.warn(f"{code}: {detail}" if detail else code, category,
                   stacklevel=2)

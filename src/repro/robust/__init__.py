@@ -1,0 +1,56 @@
+"""Guarded compilation & execution: the CVM safety ladder.
+
+The paper's promise — one logical program lowered through many IR flavors
+to many platforms — is only production-credible if a bad plan on one
+platform degrades gracefully instead of taking the query down.  This
+package is that safety layer (see docs/robustness.md):
+
+* :mod:`repro.robust.inject` — a deterministic, seeded fault-injection
+  registry with named points wired into the driver's pass loop, PlanStore
+  I/O, backend compile/execute, spmd shard execution, and the serve step,
+  so chaos tests reproduce exactly;
+* :mod:`repro.robust.fallback` — the fallback ladder the compilation
+  driver walks when a chosen plan fails verification, lowering, backend
+  compile, or its first traced execution (progressively safer strategy
+  variants, then the always-correct interp tier), plus poison-plan
+  bookkeeping so a crashing plan is never replayed from cache;
+* :mod:`repro.robust.admission` — resource admission: estimate a plan's
+  peak working set from the statistics catalog *before* execution and
+  degrade-or-reject plans over a configurable byte budget instead of
+  letting XLA OOM;
+* :mod:`repro.robust.retry` — retry/backoff/timeout policies and the EWMA
+  straggler detector (generalizing ``distributed/fault.py``), used around
+  store I/O and subprocess launches, and the deadline primitives behind
+  load shedding in ``launch/serve.py``.
+"""
+
+from .admission import (  # noqa: F401
+    AdmissionError,
+    ResourceEstimate,
+    admit,
+    default_budget,
+    estimate_peak_bytes,
+)
+from .fallback import (  # noqa: F401
+    DegradedWarning,
+    SAFE_VARIANTS,
+    degrade,
+    fallback_ladder,
+)
+from .inject import (  # noqa: F401
+    FaultRule,
+    InjectedFault,
+    InjectionPoint,
+    clear_faults,
+    inject,
+    maybe_inject,
+    register_point,
+    registered_points,
+)
+from .retry import (  # noqa: F401
+    Deadline,
+    Ewma,
+    RetryPolicy,
+    StragglerDetector,
+    call_with_retry,
+)

@@ -1,0 +1,682 @@
+"""Chaos suite: fault injection, fallback chains, poison plans, admission,
+and load shedding.
+
+Every test arms a seeded fault at one registered injection point
+(``repro.robust.inject``) and asserts the stack *degrades instead of
+failing*: relational queries land on interp-oracle-correct results through
+the fallback ladder (with a loud ``DegradedWarning``), crashed plans are
+poisoned in the store so they are never replayed, over-budget plans are
+degraded or rejected before the backend allocates, and the serve loop sheds
+load under slow-step injection without deadlocking.
+
+``REPRO_CHAOS_SEED`` selects the injection seed (CI runs two); setting
+``REPRO_CHAOS_TRACE_DIR`` writes one Chrome trace per test for artifact
+upload.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import subprocess
+import sys
+import textwrap
+import time
+import warnings
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.compiler import PlanCache, compile as cvm_compile
+from repro.compiler.store import PlanStore
+from repro.core.expr import col
+from repro.frontends.dataflow import Context, count_, sum_, _to_numpy
+from repro.launch.hermetic import subprocess_env
+from repro.launch.serve import AdmissionQueue, Request, serve_loop
+from repro.obs import DegradedWarning, tracing, write_chrome_trace
+from repro.robust.admission import (AdmissionError, admit,
+                                    estimate_peak_bytes)
+from repro.robust.fallback import SAFE_VARIANTS, fallback_ladder
+from repro.robust.inject import (FaultRule, InjectedFault, inject,
+                                 maybe_inject, registered_points)
+from repro.robust.retry import (Deadline, RetryPolicy, StragglerDetector,
+                                call_with_retry)
+
+ROOT = Path(__file__).resolve().parents[1]
+
+#: the chaos seed CI sweeps (two fixed values); every armed rule uses it
+CHAOS_SEED = int(os.environ.get("REPRO_CHAOS_SEED", "0"))
+
+
+@pytest.fixture(autouse=True)
+def _chaos_trace(request):
+    """Per-test Chrome trace when ``REPRO_CHAOS_TRACE_DIR`` is set (the CI
+    chaos lane uploads these as artifacts)."""
+    trace_dir = os.environ.get("REPRO_CHAOS_TRACE_DIR")
+    if not trace_dir:
+        yield
+        return
+    with tracing() as tr:
+        yield
+    out = Path(trace_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    name = re.sub(r"[^\w.-]+", "_", request.node.name)
+    write_chrome_trace(str(out / f"{name}.json"), tr)
+
+
+def make_sales_ctx() -> Context:
+    rng = np.random.default_rng(7)
+    n = 2048
+    ctx = Context(pad_to=256)
+    ctx.register("sales", {
+        "region": rng.integers(0, 6, n).astype(np.int32),
+        "amount": rng.gamma(2.0, 50.0, n).astype(np.float32),
+        "year": rng.integers(2018, 2026, n).astype(np.int32),
+    })
+    return ctx
+
+
+def sales_query(ctx: Context):
+    return (ctx.table("sales")
+            .filter(col("year") >= 2020)
+            .group_by("region", max_groups=8)
+            .agg(sum_("amount").as_("rev"), count_().as_("n")))
+
+
+def run_compiled(ctx: Context, result) -> dict:
+    (out,) = result(ctx.sources())
+    return _to_numpy(out)
+
+
+def assert_matches_oracle(got: dict, oracle: dict) -> None:
+    assert set(got) == set(oracle)
+    order_got = np.argsort(np.asarray(got["region"]).ravel())
+    order_want = np.argsort(np.asarray(oracle["region"]).ravel())
+    for k in oracle:
+        np.testing.assert_allclose(
+            np.asarray(got[k]).ravel()[order_got],
+            np.asarray(oracle[k]).ravel()[order_want], rtol=1e-4)
+
+
+@pytest.fixture()
+def sales():
+    ctx = make_sales_ctx()
+    oracle = ctx.execute(sales_query(ctx), target="interp")
+    return ctx, oracle
+
+
+# ---------------------------------------------------------------------------
+# the injection registry itself
+# ---------------------------------------------------------------------------
+
+
+class TestInjectionRegistry:
+    def test_catalog_covers_the_stack(self):
+        points = registered_points()
+        for name in ["driver.pass", "store.load", "store.save",
+                     "backend.compile", "backend.execute", "spmd.shard",
+                     "serve.step"]:
+            assert name in points, sorted(points)
+
+    def test_unknown_point_and_mode_rejected(self):
+        with pytest.raises(KeyError, match="unknown injection point"):
+            with inject("no.such.point"):
+                pass
+        with pytest.raises(ValueError, match="modes"):
+            with inject("backend.compile", mode="corrupt"):
+                pass
+
+    def test_unarmed_site_is_passthrough(self):
+        payload = object()
+        assert maybe_inject("backend.execute", payload) is payload
+
+    def test_firing_sequence_replays_for_a_seed(self):
+        def sequence(seed):
+            fired = []
+            with inject("backend.execute", rate=0.5, times=None, seed=seed):
+                for i in range(32):
+                    try:
+                        maybe_inject("backend.execute")
+                        fired.append(False)
+                    except InjectedFault:
+                        fired.append(True)
+            return fired
+
+        assert sequence(CHAOS_SEED) == sequence(CHAOS_SEED)
+        assert any(sequence(CHAOS_SEED))
+        assert not all(sequence(CHAOS_SEED))
+
+    def test_times_bounds_firings(self):
+        with inject("backend.execute", times=2) as rule:
+            for _ in range(2):
+                with pytest.raises(InjectedFault):
+                    maybe_inject("backend.execute")
+            maybe_inject("backend.execute")  # budget spent: no fire
+        assert rule.fired == 2
+
+    def test_corrupt_without_corruptor_degenerates_to_raise(self):
+        with inject("driver.pass", mode="corrupt"):
+            with pytest.raises(InjectedFault):
+                maybe_inject("driver.pass", "payload")
+
+
+# ---------------------------------------------------------------------------
+# fallback chain: every fault lands on oracle-correct results, loudly
+# ---------------------------------------------------------------------------
+
+
+class TestFallbackChain:
+    @pytest.mark.parametrize("point,mode", [
+        ("driver.pass", "raise"),
+        ("driver.pass", "corrupt"),
+        ("backend.compile", "raise"),
+        ("backend.execute", "raise"),
+    ])
+    def test_fault_degrades_to_oracle_correct(self, sales, point, mode):
+        ctx, oracle = sales
+        with tracing() as tr:
+            with warnings.catch_warnings(record=True) as caught:
+                warnings.simplefilter("always")
+                with inject(point, mode=mode, times=1, seed=CHAOS_SEED):
+                    result = ctx.compile(sales_query(ctx), target="local",
+                                         cache=PlanCache())
+                    got = run_compiled(ctx, result)
+        assert_matches_oracle(got, oracle)
+        degraded = [w for w in caught
+                    if issubclass(w.category, DegradedWarning)]
+        assert degraded, "fallback must be loud, not silent"
+        assert result.degraded, result.explain()
+        assert "DEGRADED" in result.explain()
+        assert tr.counters.get("robust.fallback.step", 0) >= 1
+        assert tr.counters.get("robust.fallback.recovered", 0) >= 1
+        assert tr.counters.get(f"robust.inject.{point}", 0) >= 1
+
+    def test_exec_guard_disarms_after_recovery(self, sales):
+        ctx, oracle = sales
+        with inject("backend.execute", times=1, seed=CHAOS_SEED):
+            result = ctx.compile(sales_query(ctx), target="local",
+                                 cache=PlanCache())
+            run_compiled(ctx, result)
+        # the surviving plan is spliced in: the second call must dispatch
+        # straight to it, without warnings or further ladder walks
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            got = run_compiled(ctx, result)
+        assert_matches_oracle(got, oracle)
+        assert not [w for w in caught
+                    if issubclass(w.category, DegradedWarning)]
+
+    def test_metrics_carry_degradation(self, sales):
+        ctx, _ = sales
+        with inject("backend.compile", times=1, seed=CHAOS_SEED):
+            result = ctx.compile(sales_query(ctx), target="local",
+                                 cache=PlanCache())
+        assert result.metrics()["degraded"] == list(result.degraded)
+
+    def test_guard_off_raises(self, sales):
+        ctx, _ = sales
+        with inject("backend.compile", times=1, seed=CHAOS_SEED):
+            with pytest.raises(InjectedFault):
+                ctx.compile(sales_query(ctx), target="local",
+                            cache=PlanCache(), guard=False)
+
+    def test_invalid_inputs_still_raise_under_guard(self, sales):
+        """The guard protects against *plan* failures, not caller bugs."""
+        ctx, _ = sales
+        with pytest.raises(ValueError, match="sales"):
+            ctx.compile(sales_query(ctx), parallel=3, cache=PlanCache())
+
+    def test_ladder_shape(self):
+        chosen = {"groupby": "direct", "fuse": "fused",
+                  "grouped-recombine": "exchange"}
+        rungs = list(fallback_ladder(chosen))
+        assert [r for r, _ in rungs] == [
+            "groupby=sorted", "fuse=unfused", "grouped-recombine=gather",
+            "interp"]
+        # already-safe choices are skipped, never retried
+        assert list(fallback_ladder({"groupby": "sorted"},
+                                    choice_names={"groupby"})) \
+            == [("interp", None)]
+
+
+# ---------------------------------------------------------------------------
+# poison plans: a crashed plan is never reloaded and re-crashed
+# ---------------------------------------------------------------------------
+
+
+class TestPoisonPlans:
+    def test_poison_prevents_second_crash_from_cache(self, sales, tmp_path):
+        ctx, oracle = sales
+        store = PlanStore(tmp_path)
+        q = sales_query(ctx)
+
+        with inject("backend.execute", times=1, seed=CHAOS_SEED):
+            first = ctx.compile(q, target="local", cache=PlanCache(),
+                                store=store)
+            got = run_compiled(ctx, first)  # crashes once, guard recovers
+        assert_matches_oracle(got, oracle)
+        assert first.degraded
+
+        # the crashed strategy is on the store's poison list
+        records = [p for p in tmp_path.glob("*.json")
+                   if p.name != "calibration.json"]
+        assert records, "plan record must persist"
+        poisons = [json.loads(p.read_text()).get("poison") or []
+                   for p in records]
+        assert any(poisons), "crashed strategy must be poisoned"
+
+        # a fresh process (fresh memory cache, same store) must not walk
+        # into the same crash: the poisoned strategy is skipped up front
+        with tracing() as tr:
+            with warnings.catch_warnings(record=True) as caught:
+                warnings.simplefilter("always")
+                second = ctx.compile(q, target="local", cache=PlanCache(),
+                                     store=store)
+                got = run_compiled(ctx, second)
+        assert_matches_oracle(got, oracle)
+        assert second.degraded
+        assert tr.counters.get("robust.fallback.poison_skip", 0) >= 1
+        assert [w for w in caught
+                if issubclass(w.category, DegradedWarning)]
+
+    def test_poisoned_strategies_roundtrip(self, tmp_path):
+        store = PlanStore(tmp_path)
+        store.mark_poison("k1", (("fuse", "fused"), ("groupby", "sorted")),
+                          reason="execute: boom")
+        record = store._read_raw(store._plan_path("k1"))
+        got = PlanStore.poisoned_strategies(record)
+        assert (("fuse", "fused"), ("groupby", "sorted")) in got
+        # idempotent: marking again does not duplicate
+        store.mark_poison("k1", (("groupby", "sorted"), ("fuse", "fused")),
+                          reason="again")
+        record = store._read_raw(store._plan_path("k1"))
+        assert len(record["poison"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# plan-store chaos: retries, quarantine, non-fatal writes
+# ---------------------------------------------------------------------------
+
+
+class TestStoreChaos:
+    def _record_paths(self, root: Path):
+        return [p for p in root.glob("*.json") if p.name != "calibration.json"]
+
+    def test_load_fault_degrades_to_miss(self, sales, tmp_path):
+        ctx, oracle = sales
+        store = PlanStore(tmp_path)
+        q = sales_query(ctx)
+        ctx.compile(q, target="local", cache=PlanCache(), store=store)
+        (record,) = self._record_paths(tmp_path)
+
+        with tracing() as tr:
+            with inject("store.load", mode="raise", times=1,
+                        seed=CHAOS_SEED):
+                result = ctx.compile(q, target="local", cache=PlanCache(),
+                                     store=store)
+        got = run_compiled(ctx, result)
+        assert_matches_oracle(got, oracle)
+        assert tr.counters.get("plan_store.corrupt", 0) >= 1
+        # a transient read failure must NOT quarantine the good bytes
+        assert record.exists()
+        assert json.loads(record.read_text())
+
+    def test_injected_corruption_quarantines(self, sales, tmp_path):
+        ctx, _ = sales
+        store = PlanStore(tmp_path)
+        q = sales_query(ctx)
+        ctx.compile(q, target="local", cache=PlanCache(), store=store)
+        (record,) = self._record_paths(tmp_path)
+
+        with tracing() as tr:
+            with inject("store.load", mode="corrupt", times=1,
+                        seed=CHAOS_SEED):
+                ctx.compile(q, target="local", cache=PlanCache(), store=store)
+        assert tr.counters.get("plan_store.quarantined", 0) == 1
+        assert record.with_suffix(".corrupt").exists()
+        # the compile that hit the corruption re-planned and re-saved a
+        # fresh, parseable record in its place
+        assert json.loads(record.read_text())
+
+    def test_on_disk_corruption_quarantined_once(self, sales, tmp_path):
+        """Real torn-write corruption: first load renames the bytes aside,
+        every later load is a clean miss — no repeated crash, no repeated
+        warning on the same corruption."""
+        ctx, oracle = sales
+        store = PlanStore(tmp_path)
+        q = sales_query(ctx)
+        ctx.compile(q, target="local", cache=PlanCache(), store=store)
+        (record,) = self._record_paths(tmp_path)
+        record.write_text("{\"target\": \"local\", \"strate")  # torn write
+
+        with tracing() as tr:
+            r2 = ctx.compile(q, target="local", cache=PlanCache(),
+                             store=store)
+            got = run_compiled(ctx, r2)
+        assert_matches_oracle(got, oracle)
+        assert tr.counters.get("plan_store.quarantined", 0) == 1
+        assert record.with_suffix(".corrupt").exists()
+
+        with tracing() as tr2:
+            ctx.compile(q, target="local", cache=PlanCache(), store=store)
+        assert tr2.counters.get("plan_store.quarantined", 0) == 0
+
+    def test_save_fault_is_nonfatal(self, sales, tmp_path):
+        ctx, oracle = sales
+        store = PlanStore(tmp_path)
+        with tracing() as tr:
+            with inject("store.save", mode="raise", times=1,
+                        seed=CHAOS_SEED):
+                result = ctx.compile(sales_query(ctx), target="local",
+                                     cache=PlanCache(), store=store)
+        got = run_compiled(ctx, result)
+        assert_matches_oracle(got, oracle)
+        assert tr.counters.get("plan_store.save_failed", 0) >= 1
+        assert not result.degraded  # persistence loss is not degradation
+
+
+# ---------------------------------------------------------------------------
+# resource admission
+# ---------------------------------------------------------------------------
+
+
+def make_big_domain_ctx() -> Context:
+    """A grouping key with a ~200k-wide domain: the dense-bucket direct
+    strategy allocates megabytes of scratch; the sorted tier does not."""
+    rng = np.random.default_rng(CHAOS_SEED + 11)
+    n = 4096
+    ctx = Context(pad_to=512)
+    ctx.register("events", {
+        "user": rng.integers(0, 200_000, n).astype(np.int32),
+        "val": rng.gamma(2.0, 10.0, n).astype(np.float32),
+    })
+    return ctx
+
+
+def events_query(ctx: Context):
+    return (ctx.table("events")
+            .group_by("user", max_groups=4096)
+            .agg(sum_("val").as_("total")))
+
+
+class TestAdmission:
+    BUDGET = 1_000_000
+
+    def test_direct_estimate_dwarfs_sorted(self):
+        ctx = make_big_domain_ctx()
+        q = events_query(ctx)
+        direct = ctx.compile(q, target="local", cache=False,
+                             strategy={"groupby": "direct"}, guard=False)
+        sorted_ = ctx.compile(q, target="local", cache=False,
+                              strategy={"groupby": "sorted"}, guard=False)
+        est_direct = estimate_peak_bytes(direct.program)
+        est_sorted = estimate_peak_bytes(sorted_.program)
+        assert est_direct.peak_site == "vec.GroupAggDirect"
+        assert est_direct.peak_bytes > self.BUDGET
+        assert est_sorted.peak_bytes < self.BUDGET
+        assert "peak ≈" in est_direct.render()
+
+    def test_over_budget_rejected_without_guard(self):
+        ctx = make_big_domain_ctx()
+        with pytest.raises(AdmissionError, match="resource admission"):
+            ctx.compile(events_query(ctx), target="local", cache=False,
+                        strategy={"groupby": "direct"},
+                        memory_budget=self.BUDGET, guard=False)
+
+    def test_over_budget_degrades_to_sorted_with_guard(self):
+        ctx = make_big_domain_ctx()
+        oracle = ctx.execute(events_query(ctx), target="interp")
+        with tracing() as tr:
+            with warnings.catch_warnings(record=True) as caught:
+                warnings.simplefilter("always")
+                result = ctx.compile(events_query(ctx), target="local",
+                                     cache=PlanCache(),
+                                     strategy={"groupby": "direct"},
+                                     memory_budget=self.BUDGET)
+        assert ("groupby", "sorted") in result.strategy
+        assert result.degraded
+        assert result.resources is not None
+        assert result.resources.peak_bytes <= self.BUDGET
+        assert tr.counters.get("robust.admission.reject", 0) >= 1
+        assert [w for w in caught
+                if issubclass(w.category, DegradedWarning)]
+        got = run_compiled(ctx, result)
+        order_g = np.argsort(np.asarray(got["user"]).ravel())
+        order_w = np.argsort(np.asarray(oracle["user"]).ravel())
+        for k in oracle:
+            np.testing.assert_allclose(
+                np.asarray(got[k]).ravel()[order_g],
+                np.asarray(oracle[k]).ravel()[order_w], rtol=1e-4)
+
+    def test_oversized_domain_downgrade_is_loud(self):
+        """A forced ``groupby=direct`` whose key domain exceeds the bucket
+        cap silently lowered to sorted before; now it warns with the
+        offending domain size (``lower_vec.direct_unavailable``)."""
+        rng = np.random.default_rng(CHAOS_SEED + 13)
+        n = 1024
+        ctx = Context(pad_to=256)
+        ctx.register("wide", {
+            # domain width ≫ MAX_DIRECT_BUCKETS (1<<20)
+            "k": rng.integers(0, 50_000_000, n).astype(np.int64),
+            "v": rng.gamma(2.0, 10.0, n).astype(np.float32),
+        })
+        q = (ctx.table("wide").group_by("k", max_groups=1024)
+             .agg(sum_("v").as_("total")))
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            result = ctx.compile(q, target="local", cache=False,
+                                 strategy={"groupby": "direct"})
+        msgs = [str(w.message) for w in caught
+                if "lower_vec.direct_unavailable" in str(w.message)]
+        assert msgs, [str(w.message) for w in caught]
+        assert "k" in msgs[0] and "too large" in msgs[0]
+        assert "vec.GroupAggSorted" in result.program.opcodes()
+        assert "vec.GroupAggDirect" not in result.program.opcodes()
+
+    def test_within_budget_admitted_with_provenance(self, sales):
+        ctx, _ = sales
+        result = ctx.compile(sales_query(ctx), target="local",
+                             cache=PlanCache(),
+                             memory_budget=1 << 30)
+        assert not result.degraded
+        assert result.resources is not None
+        assert result.metrics()["resources"]["peak_bytes"] \
+            == result.resources.peak_bytes
+
+
+# ---------------------------------------------------------------------------
+# retry / straggler / deadline primitives
+# ---------------------------------------------------------------------------
+
+
+class TestRetryPrimitives:
+    def test_retry_recovers_and_bounds(self):
+        calls = {"n": 0}
+
+        def flaky():
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise OSError("transient")
+            return "ok"
+
+        policy = RetryPolicy(max_retries=3, backoff_s=0.0)
+        assert call_with_retry(flaky, policy, name="t",
+                               sleep=lambda s: None) == "ok"
+        assert calls["n"] == 3
+
+        def always():
+            raise OSError("permanent")
+
+        with pytest.raises(OSError, match="permanent"):
+            call_with_retry(always, RetryPolicy(max_retries=1, backoff_s=0.0),
+                            name="t", sleep=lambda s: None)
+
+    def test_retry_ignores_unlisted_exceptions(self):
+        policy = RetryPolicy(max_retries=5, retry_on=(OSError,))
+        calls = {"n": 0}
+
+        def typed():
+            calls["n"] += 1
+            raise ValueError("not retryable")
+
+        with pytest.raises(ValueError):
+            call_with_retry(typed, policy, name="t", sleep=lambda s: None)
+        assert calls["n"] == 1
+
+    def test_backoff_is_exponential_and_capped(self):
+        p = RetryPolicy(backoff_s=0.1, backoff_factor=2.0, max_backoff_s=0.3)
+        assert p.backoff(0) == pytest.approx(0.1)
+        assert p.backoff(1) == pytest.approx(0.2)
+        assert p.backoff(5) == pytest.approx(0.3)
+
+    def test_straggler_detector(self):
+        det = StragglerDetector(factor=3.0, alpha=0.5)
+        assert det.observe(1.0) is False  # first observation seeds
+        assert det.observe(1.0) is False
+        assert det.observe(10.0) is True
+        assert det.stragglers == 1
+        # the slow step raised the bar: 2.0 is no longer 3× the EWMA
+        assert det.observe(2.0) is False
+
+    def test_deadline(self):
+        d = Deadline.after(100.0, clock=lambda: 0.0)
+        assert d.remaining(clock=lambda: 40.0) == pytest.approx(60.0)
+        assert not d.expired(clock=lambda: 99.0)
+        assert d.expired(clock=lambda: 100.0)
+
+
+# ---------------------------------------------------------------------------
+# serve: bounded queue + deadline-aware load shedding
+# ---------------------------------------------------------------------------
+
+
+def _echo_wave(wave):
+    return {r.rid: r.prompt for r in wave}
+
+
+class TestServeShedding:
+    def test_no_faults_serves_everything(self):
+        reqs = [Request(rid=i, prompt=i) for i in range(10)]
+        out = serve_loop(reqs, _echo_wave, batch=4)
+        assert out == {i: i for i in range(10)}
+
+    def test_queue_cap_sheds_overflow(self):
+        with tracing() as tr:
+            reqs = [Request(rid=i, prompt=i) for i in range(10)]
+            out = serve_loop(reqs, _echo_wave, batch=4, queue_cap=6)
+        assert len(out) == 6
+        assert tr.counters.get("serve.shed.queue_full", 0) == 4
+        assert tr.counters.get("serve.shed", 0) == 4
+
+    def test_slow_step_sheds_deadlines_without_deadlock(self):
+        reqs = [Request(rid=i, prompt=i) for i in range(12)]
+
+        def slow_wave(wave):
+            time.sleep(0.01)
+            return _echo_wave(wave)
+
+        t0 = time.monotonic()
+        with tracing() as tr:
+            with inject("serve.step", mode="delay", delay_s=0.05,
+                        times=None, seed=CHAOS_SEED):
+                out = serve_loop(reqs, slow_wave, batch=4, deadline_s=0.08)
+        wall = time.monotonic() - t0
+        assert wall < 5.0, "shedding must terminate promptly"
+        shed = 12 - len(out)
+        assert shed > 0, "a saturated server must shed"
+        assert tr.counters.get("serve.shed.deadline", 0) == shed
+        # every request is accounted for: served or shed, never lost
+        assert len(out) + shed == 12
+
+    def test_failing_wave_sheds_after_bounded_retries(self):
+        reqs = [Request(rid=i, prompt=i) for i in range(8)]
+        with tracing() as tr:
+            with inject("serve.step", mode="raise", times=None,
+                        seed=CHAOS_SEED):
+                out = serve_loop(reqs, _echo_wave, batch=4)
+        assert out == {}
+        assert tr.counters.get("serve.shed.error", 0) == 8
+        assert tr.counters.get("robust.retry.serve.step", 0) >= 2
+
+    def test_transient_wave_failure_is_retried_not_shed(self):
+        reqs = [Request(rid=i, prompt=i) for i in range(4)]
+        with inject("serve.step", mode="raise", times=1, seed=CHAOS_SEED):
+            out = serve_loop(reqs, _echo_wave, batch=4)
+        assert len(out) == 4
+
+    def test_take_skips_expired(self):
+        q = AdmissionQueue()
+        q.offer(Request(rid=0, prompt=0, deadline=Deadline(at=-1.0)))
+        q.offer(Request(rid=1, prompt=1))
+        wave = q.take(4)
+        assert [r.rid for r in wave] == [1]
+        assert q.shed.deadline == 1
+
+
+# ---------------------------------------------------------------------------
+# spmd chaos (own device fleet: subprocess, like test_spmd_backend)
+# ---------------------------------------------------------------------------
+
+
+SPMD_CHAOS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import warnings
+    import numpy as np
+
+    from repro.compiler import PlanCache
+    from repro.core.expr import col
+    from repro.frontends.dataflow import Context, count_, sum_, _to_numpy
+    from repro.obs import DegradedWarning
+    from repro.robust.inject import inject
+
+    seed = int(os.environ.get("REPRO_CHAOS_SEED", "0"))
+    rng = np.random.default_rng(7)
+    n = 2048
+    ctx = Context(pad_to=256)
+    ctx.register("sales", {
+        "region": rng.integers(0, 6, n).astype(np.int32),
+        "amount": rng.gamma(2.0, 50.0, n).astype(np.float32),
+        "year": rng.integers(2018, 2026, n).astype(np.int32),
+    })
+    q = (ctx.table("sales").filter(col("year") >= 2020)
+         .group_by("region", max_groups=8)
+         .agg(sum_("amount").as_("rev"), count_().as_("n")))
+
+    oracle = ctx.execute(q, target="interp")
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        with inject("spmd.shard", mode="raise", times=1, seed=seed):
+            result = ctx.compile(q, target="spmd", parallel=2,
+                                 cache=PlanCache())
+            (out,) = result(ctx.sources())
+    got = _to_numpy(out)
+    o_g = np.argsort(np.asarray(got["region"]).ravel())
+    o_w = np.argsort(np.asarray(oracle["region"]).ravel())
+    ok = all(np.allclose(np.asarray(got[k]).ravel()[o_g],
+                         np.asarray(oracle[k]).ravel()[o_w], rtol=1e-4)
+             for k in oracle)
+    print("RESULTS" + json.dumps({
+        "ok": bool(ok),
+        "degraded": list(result.degraded),
+        "warned": sum(1 for w in caught
+                      if issubclass(w.category, DegradedWarning)),
+    }))
+""")
+
+
+def test_spmd_shard_fault_recovers_to_oracle():
+    proc = subprocess.run(
+        [sys.executable, "-c", SPMD_CHAOS_SCRIPT],
+        capture_output=True, text=True, timeout=900,
+        env=subprocess_env(ROOT),
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULTS")][0]
+    got = json.loads(line[len("RESULTS"):])
+    assert got["ok"], got
+    assert got["degraded"], got
+    assert got["warned"] >= 1, got

@@ -59,6 +59,42 @@ def markdown(mesh: str = "16x16") -> str:
     return "\n".join(lines)
 
 
+def streaming_peak_gbps(nbytes: int = 1 << 26) -> float:
+    """Measured streaming-copy bandwidth of this host (GB/s) — the roof a
+    memory-bound kernel pass is judged against.  A device-to-device copy of
+    ``nbytes`` (best of 5) counts read+write bytes."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    src = jnp.zeros(nbytes // 4, jnp.float32)
+    copy = jax.jit(lambda a: a + 0.0)
+    jax.block_until_ready(copy(src))
+    best = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        jax.block_until_ready(copy(src))
+        best = min(best, time.perf_counter() - t0)
+    return 2.0 * nbytes / best / 1e9
+
+
+def kernel_roofline(bytes_moved: int, wall_s: float,
+                    peak_gbps: float) -> dict:
+    """One kernel pass against the streaming roof: achieved GB/s, the
+    measured peak, and the fraction of roof attained.  A memory-bound fused
+    pipeline should land within an order of magnitude of the roof; far
+    below means the pass is compute- (or overhead-) bound, not streaming."""
+    achieved = bytes_moved / wall_s / 1e9 if wall_s > 0 else 0.0
+    return {
+        "bytes_moved": int(bytes_moved),
+        "wall_s": float(wall_s),
+        "achieved_gbps": achieved,
+        "peak_gbps": float(peak_gbps),
+        "roofline_fraction": achieved / peak_gbps if peak_gbps else 0.0,
+    }
+
+
 def main():
     rows = load()
     for r in rows:

@@ -196,6 +196,39 @@ def _mergejoin(ctx, ins, args):
                                  key_domains=ins.param("key_domains"))]
 
 
+@emitter("vec.HashJoinDirect")
+def _hashjoin_direct(ctx, ins, args):
+    nb = ins.param("num_buckets")
+    return [rt.hash_join_direct(args[0], args[1], ins.param("left_on"),
+                                ins.param("right_on"),
+                                int(ins.param("max_count")),
+                                key_domains=ins.param("key_domains"),
+                                num_buckets=int(nb) if nb is not None else None)]
+
+
+@emitter("vec.FusedJoinGroupAgg")
+def _fused_join_group_agg(ctx, ins, args):
+    left, right = args
+    kw = dict(
+        left_on=tuple(ins.param("left_on")),
+        right_on=tuple(ins.param("right_on")),
+        join_key_domains=tuple(ins.param("join_key_domains")),
+        join_num_buckets=int(ins.param("join_num_buckets")),
+        keys=tuple(ins.param("keys")),
+        aggs=tuple(ins.param("aggs")),
+        max_groups=int(ins.param("max_groups")),
+        key_domains=tuple(ins.param("key_domains")),
+        num_buckets=int(ins.param("num_buckets")),
+        pred=ins.param("pred"),
+    )
+    if (ctx.use_kernels and kw["join_num_buckets"] <= _KERNEL_MAX_BUCKETS
+            and kw["num_buckets"] <= _KERNEL_MAX_BUCKETS):
+        from ..kernels import ops as kops
+        return [kops.grouped_join_agg(left, right, interpret=ctx.interpret,
+                                      **kw)]
+    return [rt.fused_join_group_agg(left, right, **kw)]
+
+
 @emitter("vec.Compact")
 def _compact(ctx, ins, args):
     return [rt.compact(args[0], ins.param("max_count"))]

@@ -95,6 +95,34 @@ class CostModel:
             probe = rows * max(math.log2(max(right.rows, 2.0)), 1.0) * bpr
             return probe + right.rows * right.bytes_per_row
 
+        if op == "vec.HashJoinDirect":
+            # sort-free direct table: one linear pass over each side plus the
+            # dense-table build/probe epilogue — the bucket term grows with
+            # the key domain and hands the win back to the sorted tier at
+            # high NDV, exactly like GroupAggDirect
+            right = args[1] if len(args) > 1 else args[0]
+            nb = float(ins.param("num_buckets") or 1.0)
+            if ins.param("key_domains") is not None:
+                nb = 1.0
+                for lo, hi in ins.param("key_domains"):
+                    nb *= float(hi) - float(lo) + 1.0
+            # the per-bucket weight is the i32 slot ×8: a scatter-min build
+            # plus a gathered probe cost well more per bucket than the
+            # groupby tier's segment-sum rows (calibrated on the BENCH_8
+            # cells so the sorted tier takes back sparse ~2^19 domains)
+            return (rows * bpr + right.rows * right.bytes_per_row
+                    + 8.0 * nb * 4.0)
+
+        if op == "vec.FusedJoinGroupAgg":
+            # single fused pass: probe side + build side touched once, plus
+            # the join direct table and the group bucket epilogue; no join
+            # materialization / compact term at all
+            right = args[1] if len(args) > 1 else args[0]
+            nbj = float(ins.param("join_num_buckets") or 1.0)
+            nbg = float(ins.param("num_buckets") or 1.0)
+            return (rows * bpr + right.rows * right.bytes_per_row
+                    + 8.0 * nbj * 4.0 + 2.0 * nbg * outs[0].bytes_per_row)
+
         if op == "cf.Merge":
             src = producers.get(ins.inputs[0].name)
             gathered = outs[0].rows * outs[0].bytes_per_row

@@ -31,7 +31,8 @@ from ..robust.inject import InjectedFault, maybe_inject
 from .cost import CALIBRATION, Candidate, PlanDecision, estimate_cost
 from .fingerprint import fingerprint, fingerprint_value
 from .stats import Statistics
-from .targets import Choice, CompileOptions, get_target, target_epoch
+from .targets import (Choice, CompileOptions, StrategyStage, get_target,
+                      target_epoch)
 
 __all__ = [
     "compile", "run_passes", "program_size",
@@ -336,10 +337,16 @@ def _lower_with_strategy(program: Program, tgt: Any, opts: CompileOptions,
     """Run the target's lowering path with each Choice bound to a variant."""
     records: List[PassRecord] = []
     lowered = program
+    seen: set = set()
     for stage in tgt.lowering_path:
         if isinstance(stage, Choice):
             stage = stage.variant(chosen.get(stage.name, stage.default))
-        lowered = run_passes(lowered, stage.build(opts), stage=stage.name,
+            if id(stage) in seen:
+                continue  # several Choices may share one StrategyStage
+            seen.add(id(stage))
+        passes = (stage.build(opts, chosen) if isinstance(stage, StrategyStage)
+                  else stage.build(opts))
+        lowered = run_passes(lowered, passes, stage=stage.name,
                              records=records, check=check)
     return lowered, records
 

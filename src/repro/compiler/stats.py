@@ -309,12 +309,28 @@ def _propagate_ins(ins, args, stats, env: StatsEnv, program: Program):
         return [RegStats(rows=groups, bytes_per_row=_bpr_of(ins.outputs[0]),
                          ndv=ndv, domains=domains)]
 
-    if op in ("rel.Join", "vec.MergeJoinSorted"):
+    if op in ("rel.Join", "vec.MergeJoinSorted", "vec.HashJoinDirect"):
         left = args[0]
         out = replace(left.scaled(1.0), bytes_per_row=_bpr_of(ins.outputs[0]),
                       ndv=tuple(left.ndv) + tuple(args[1].ndv),
                       domains=tuple(left.domains) + tuple(args[1].domains))
         return [out]
+
+    if op == "vec.FusedJoinGroupAgg":
+        # select→join→group in one op: the grouping sees the joined columns
+        left = args[0]
+        sel = DEFAULT_SELECTIVITY if ins.param("pred") is not None else 1.0
+        joined = replace(left.scaled(sel),
+                         ndv=tuple(left.ndv) + tuple(args[1].ndv),
+                         domains=tuple(left.domains) + tuple(args[1].domains))
+        keys = tuple(ins.param("keys") or ())
+        cap = ins.param("max_groups")
+        groups = joined.group_rows(keys, int(cap) if cap else None)
+        ndv = tuple((k, min(joined.ndv_of(k) or groups, groups)) for k in keys)
+        domains = tuple((k, d) for k in keys
+                        for d in (joined.domain_of(k),) if d is not None)
+        return [RegStats(rows=groups, bytes_per_row=_bpr_of(ins.outputs[0]),
+                         ndv=ndv, domains=domains)]
 
     if op in ("rel.Limit", "vec.LimitVec", "vec.TopKVec"):
         k = float(ins.param("k", first.rows))

@@ -26,6 +26,7 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 from ..core.passes import (
     CommonSubexpressionElimination,
     DeadCodeElimination,
+    FuseJoinGroupAgg,
     FuseSelectAgg,
     FuseSelectGroupAgg,
     LowerToMesh,
@@ -36,10 +37,10 @@ from ..core.passes import (
 from ..core.passes.lower_vec import Catalog, LowerRelToVec
 
 __all__ = [
-    "CompileOptions", "Stage", "Choice", "Target",
+    "CompileOptions", "Stage", "StrategyStage", "Choice", "Target",
     "register_target", "get_target", "available_targets",
     "CANONICALIZE", "PARALLELIZE", "LOWER_REL_TO_VEC", "FUSE", "LOWER_TO_MESH",
-    "FUSE_CHOICE", "GROUPED_RECOMBINE", "GROUPBY_CHOICE",
+    "FUSE_CHOICE", "GROUPED_RECOMBINE", "GROUPBY_CHOICE", "JOIN_CHOICE",
 ]
 
 
@@ -120,6 +121,20 @@ class Stage:
     build: Callable[[CompileOptions], Sequence[Any]]
 
 
+@dataclass(frozen=True)
+class StrategyStage(Stage):
+    """A Stage whose passes depend on the WHOLE bound strategy.
+
+    ``build`` receives ``(opts, chosen)`` — the full choice-name → label
+    binding of the candidate being lowered.  This is what lets several
+    Choices (``groupby``, ``join``) parameterize one shared pass
+    (:class:`LowerRelToVec`) instead of multiplying variant Stages per
+    label combination.
+    """
+
+    build: Callable[[CompileOptions, Dict[str, str]], Sequence[Any]]
+
+
 def _canonicalize(opts: CompileOptions) -> Sequence[Any]:
     return [CommonSubexpressionElimination(), DeadCodeElimination()]
 
@@ -137,7 +152,8 @@ def _lower_rel_to_vec(opts: CompileOptions) -> Sequence[Any]:
 
 def _fuse(opts: CompileOptions) -> Sequence[Any]:
     if opts.fuse:
-        return [FuseSelectAgg(), FuseSelectGroupAgg(), DeadCodeElimination()]
+        return [FuseSelectAgg(), FuseSelectGroupAgg(), FuseJoinGroupAgg(),
+                DeadCodeElimination()]
     return []
 
 
@@ -190,22 +206,48 @@ class Choice:
             f"known: {[l for l, _ in self.variants]}")
 
 
-def _lower_rel_to_vec_direct(opts: CompileOptions) -> Sequence[Any]:
+def _lower_rel_to_vec_chosen(opts: CompileOptions,
+                             chosen: Dict[str, str]) -> Sequence[Any]:
     return [LowerRelToVec(opts.catalog if opts.catalog is not None else Catalog(),
-                          groupby="direct")]
+                          groupby=chosen.get("groupby", "sorted"),
+                          join=chosen.get("join", "sorted"))]
+
+
+#: the one lowering stage both physical-operator Choices parameterize: the
+#: groupby and join tier labels of the bound strategy become LowerRelToVec
+#: constructor arguments
+LOWER_REL_TO_VEC_STRATEGY = StrategyStage("lower-rel-to-vec",
+                                          _lower_rel_to_vec_chosen)
 
 
 #: grouped aggregation tier: SortByKey + GroupAggSorted (O(n log n), always
-#: valid — the plain LOWER_REL_TO_VEC stage) vs the sort-free dense-bucket
-#: GroupAggDirect (O(n), needs catalog key-domain bounds).  The first Choice
-#: whose variants have asymptotically different cost — NDV/domain size
-#: decides, like gather-vs-exchange.
+#: valid) vs the sort-free dense-bucket GroupAggDirect (O(n), needs catalog
+#: key-domain bounds).  The first Choice whose variants have asymptotically
+#: different cost — NDV/domain size decides, like gather-vs-exchange.  Both
+#: variants bind the SAME shared lowering stage; the label reaches it via
+#: the strategy dict.
 GROUPBY_CHOICE = Choice(
     name="groupby",
-    variants=(("sorted", LOWER_REL_TO_VEC),
-              ("direct", Stage("lower-rel-to-vec", _lower_rel_to_vec_direct))),
+    variants=(("sorted", LOWER_REL_TO_VEC_STRATEGY),
+              ("direct", LOWER_REL_TO_VEC_STRATEGY)),
     default="sorted",
     available=lambda opts: (("sorted", "direct") if opts.stats() is not None
+                            else ("sorted",)),
+)
+
+
+_JOIN_TIER = Stage("join-strategy", lambda opts: [])
+
+#: physical join tier: SortByKey(build) + MergeJoinSorted (O(n log n),
+#: always valid) vs the sort-free dense direct-table vec.HashJoinDirect
+#: (O(n), needs the joint key domain bounded — or falls back in-trace via
+#: its dynamic-bounds variant).  The variants are no-op Stages: the label
+#: is consumed by LOWER_REL_TO_VEC_STRATEGY, which GROUPBY_CHOICE binds.
+JOIN_CHOICE = Choice(
+    name="join",
+    variants=(("sorted", _JOIN_TIER), ("hash", _JOIN_TIER)),
+    default="sorted",
+    available=lambda opts: (("sorted", "hash") if opts.stats() is not None
                             else ("sorted",)),
 )
 
@@ -331,7 +373,8 @@ register_target(Target(
 register_target(Target(
     name="local",
     flavors=("vec", "cf", "rel", "df", "la", "tz"),
-    lowering_path=(CANONICALIZE, PARALLELIZE, GROUPBY_CHOICE, FUSE_CHOICE),
+    lowering_path=(CANONICALIZE, PARALLELIZE, GROUPBY_CHOICE, JOIN_CHOICE,
+                   FUSE_CHOICE),
     make_backend=_make_local,
     source_kind="vec",
 ))
@@ -339,8 +382,8 @@ register_target(Target(
 register_target(Target(
     name="spmd",
     flavors=("vec", "cf", "rel", "la", "mesh"),
-    lowering_path=(CANONICALIZE, PARALLELIZE, GROUPBY_CHOICE, FUSE_CHOICE,
-                   LOWER_TO_MESH, GROUPED_RECOMBINE),
+    lowering_path=(CANONICALIZE, PARALLELIZE, GROUPBY_CHOICE, JOIN_CHOICE,
+                   FUSE_CHOICE, LOWER_TO_MESH, GROUPED_RECOMBINE),
     make_backend=_make_spmd,
     source_kind="vec",
     needs_mesh=True,
@@ -352,8 +395,8 @@ register_target(Target(
 register_target(Target(
     name="multipod",
     flavors=("vec", "cf", "rel", "la", "mesh"),
-    lowering_path=(CANONICALIZE, PARALLELIZE, GROUPBY_CHOICE, FUSE_CHOICE,
-                   LOWER_TO_MESH, GROUPED_RECOMBINE),
+    lowering_path=(CANONICALIZE, PARALLELIZE, GROUPBY_CHOICE, JOIN_CHOICE,
+                   FUSE_CHOICE, LOWER_TO_MESH, GROUPED_RECOMBINE),
     make_backend=_make_spmd,
     source_kind="vec",
     needs_mesh=True,

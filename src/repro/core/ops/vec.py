@@ -244,6 +244,85 @@ def _mergejoin(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[I
     return [Vec(schema, int(params["max_count"]))]
 
 
+@op("vec.HashJoinDirect")
+def _hashjoin_direct(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """HashJoinDirect(left_on, right_on, max_count[, key_domains | num_buckets])
+    (Vec⟨L⟩, Vec⟨R⟩) → Vec⟨L⋈R⟩.
+
+    Sort-free PK-FK equi-join: the build side scatters into a dense direct
+    table over the composite key domain and every probe is one gather — no
+    sort, no searchsorted (the join sibling of GroupAggDirect).  With static
+    ``key_domains`` the table size is the domain product; without, the
+    bounds are traced jointly from the data against a static ``num_buckets``
+    budget, with a per-instruction in-trace fallback to the sorted merge.
+    """
+    l, r = _vec(ins[0]), _vec(ins[1])
+    left_on = tuple(params["left_on"])
+    right_on = tuple(params["right_on"])
+    key_domains = params.get("key_domains")
+    if key_domains is not None:
+        if len(tuple(key_domains)) != len(left_on):
+            raise TypeError("HashJoinDirect: key_domains must match join keys")
+        n_buckets = 1
+        for lo, hi in key_domains:
+            n_buckets *= int(hi) - int(lo) + 1
+        if n_buckets <= 0:
+            raise TypeError("HashJoinDirect: empty key domain")
+    elif params.get("num_buckets") is None:
+        raise TypeError("HashJoinDirect needs key_domains or a num_buckets "
+                        "budget for the dynamic-bounds variant")
+    schema = join_schema(l.schema, r.schema, left_on, right_on)
+    return [Vec(schema, int(params["max_count"]))]
+
+
+@op("vec.FusedJoinGroupAgg", aggregation={"kind": "grouped"})
+def _fused_join_group_agg(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """FusedJoinGroupAgg(pred, left_on, right_on, join_key_domains,
+    join_num_buckets, keys, aggs, max_groups, key_domains, num_buckets)
+    (Vec⟨L⟩, Vec⟨R⟩) → Vec⟨keys+aggs⟩.
+
+    Whole-pipeline select→join→group operator: the probe-side predicate,
+    the direct-table probe and the dense grouped reduction run in a single
+    pass — the join result is never materialized (no intermediate Vec, no
+    compact).  Both the join key domain and the group key domain must be
+    statically bounded; the ``grouped_join_agg`` Pallas kernel backs it
+    under ``use_kernels``.
+    """
+    l, r = _vec(ins[0]), _vec(ins[1])
+    left_on = tuple(params["left_on"])
+    right_on = tuple(params["right_on"])
+    jkd = tuple(params["join_key_domains"])
+    if len(jkd) != len(left_on):
+        raise TypeError("FusedJoinGroupAgg: join_key_domains must match join keys")
+    njb = 1
+    for lo, hi in jkd:
+        njb *= int(hi) - int(lo) + 1
+    if int(params["join_num_buckets"]) != njb:
+        raise TypeError(
+            f"FusedJoinGroupAgg: join_num_buckets {params['join_num_buckets']} "
+            f"does not match join key domain product {njb}")
+    joined = join_schema(l.schema, r.schema, left_on, right_on)
+    pred = params.get("pred")
+    if pred is not None:
+        if pred.infer(l.schema).domain != "bool":
+            raise TypeError("FusedJoinGroupAgg predicate not boolean")
+    keys: Tuple[str, ...] = tuple(params["keys"])
+    key_domains = tuple(params["key_domains"])
+    if len(key_domains) != len(keys):
+        raise TypeError("FusedJoinGroupAgg: key_domains must match keys")
+    ngb = 1
+    for lo, hi in key_domains:
+        ngb *= int(hi) - int(lo) + 1
+    if int(params["num_buckets"]) != ngb:
+        raise TypeError(
+            f"FusedJoinGroupAgg: num_buckets {params['num_buckets']} does not "
+            f"match group key domain product {ngb}")
+    aggs: Tuple[AggSpec, ...] = tuple(params["aggs"])
+    fields = tuple((k, joined.field(k)) for k in keys)
+    fields += tuple((a.name, a.result_atom(joined)) for a in aggs)
+    return [Vec(TupleType(fields), int(params["max_groups"]))]
+
+
 @op("vec.LimitVec")
 def _limitvec(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
     """LimitVec(k)(Vec⟨T⟩) → Vec⟨T⟩ — keep the first k valid rows."""

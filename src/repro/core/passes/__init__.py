@@ -13,7 +13,8 @@ from .rewriter import (  # noqa: F401
 from .dce import DeadCodeElimination  # noqa: F401
 from .cse import CommonSubexpressionElimination  # noqa: F401
 from .parallelize import Parallelize  # noqa: F401
-from .fusion import FuseKMeansStep, FuseSelectAgg, FuseSelectGroupAgg  # noqa: F401
+from .fusion import (FuseJoinGroupAgg, FuseKMeansStep, FuseSelectAgg,  # noqa: F401
+                     FuseSelectGroupAgg)
 from .mesh_lower import (  # noqa: F401
     LowerToMesh, PushCombineIntoMesh, PushGroupedCombineIntoMesh,
 )

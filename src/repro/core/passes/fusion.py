@@ -11,6 +11,11 @@ collapse into single instructions that the backend JIT-compiles as one unit
   grouped aggregation, the TPC-H Q1 single-pass shape; under
   ``use_kernels`` the whole pipeline is one ``grouped_select_agg`` Pallas
   kernel invocation.
+* ``FuseJoinGroupAgg`` — ``[MaskSelect →] HashJoinDirect → GroupAggDirect``
+  becomes ``vec.FusedJoinGroupAgg``: the whole select→join→group pipeline
+  (the TPC-H Q3/Q12 shape) runs as one pass and the join result is never
+  materialized; under ``use_kernels`` it is one ``grouped_join_agg`` Pallas
+  kernel invocation.
 * ``FuseKMeansStep`` — ``CDist2 → ArgMinRow → SegSum + SegCount`` becomes
   ``la.KMeansStep`` (the "run-based aggregation" plan analysis the paper
   credits for matching hand-written C++ k-means).
@@ -128,6 +133,83 @@ class FuseSelectGroupAgg(ProgramRule):
             fused = Instruction("vec.GroupAggDirect", (base,), y.outputs,
                                 tuple(params.items()))
             dead = {id(c) for c in chain}
+            new_body = [fused if ins is y else ins
+                        for ins in program.body if id(ins) not in dead]
+            return program.with_body(new_body)
+        return None
+
+
+class FuseJoinGroupAgg(ProgramRule):
+    """Fold [MaskSelect →] HashJoinDirect → GroupAggDirect into one op.
+
+    The whole-pipeline select→join→group shape (TPC-H Q3/Q12): the join
+    result is never materialized — predicate, direct-table probe and dense
+    grouped reduction become a single ``vec.FusedJoinGroupAgg`` instruction
+    (one ``grouped_join_agg`` Pallas kernel under ``use_kernels``).
+
+    Only the statically-bounded join variant fuses (``key_domains`` present;
+    the dynamic-bounds variant carries an in-trace sorted fallback that the
+    fused op cannot replicate).  A predicate already fused into the
+    GroupAggDirect (by FuseSelectGroupAgg, which runs first) is absorbed
+    when it only reads probe-side columns — left-column filters commute
+    with a PK-FK inner join.  A MaskSelect feeding the join's probe side
+    folds in the same way.  Column-name collisions between the sides would
+    need the ``_r`` rename; the rule bails instead.
+    """
+
+    name = "fuse-join-groupagg"
+
+    def run(self, program: Program) -> Optional[Program]:
+        producers = program.producers()
+
+        for y in program.body:
+            if y.opcode != "vec.GroupAggDirect":
+                continue
+            join = producers.get(y.inputs[0].name)
+            if (join is None or join.opcode != "vec.HashJoinDirect"
+                    or program.uses(join.outputs[0]) != 1):
+                continue
+            if join.param("key_domains") is None:
+                continue  # dynamic-bounds variant: in-trace fallback, no fuse
+            left, right = join.inputs
+            lnames = set(left.type.schema.names)
+            right_on = tuple(join.param("right_on"))
+            rnames = [n for n in right.type.schema.names if n not in right_on]
+            if any(n in lnames for n in rnames):
+                continue
+            pred: Optional[Expr] = y.param("pred")
+            if pred is not None and not set(pred.fields()) <= lnames:
+                continue  # predicate reads a build-side column: can't hoist
+
+            chain: List[Instruction] = []
+            cur = producers.get(left.name)
+            if (cur is not None and cur.opcode == "vec.MaskSelect"
+                    and program.uses(cur.outputs[0]) == 1):
+                sel = cur.param("pred")
+                pred = sel if pred is None else (pred & sel)
+                chain.append(cur)
+                left = cur.inputs[0]
+
+            jkd = tuple(join.param("key_domains"))
+            njb = 1
+            for lo, hi in jkd:
+                njb *= int(hi) - int(lo) + 1
+            fused = Instruction(
+                "vec.FusedJoinGroupAgg",
+                (left, right),
+                y.outputs,
+                (("pred", pred),
+                 ("left_on", tuple(join.param("left_on"))),
+                 ("right_on", right_on),
+                 ("join_key_domains", jkd),
+                 ("join_num_buckets", njb),
+                 ("keys", tuple(y.param("keys"))),
+                 ("aggs", tuple(y.param("aggs"))),
+                 ("max_groups", int(y.param("max_groups"))),
+                 ("key_domains", tuple(y.param("key_domains"))),
+                 ("num_buckets", int(y.param("num_buckets")))),
+            )
+            dead = {id(c) for c in chain} | {id(join)}
             new_body = [fused if ins is y else ins
                         for ins in program.body if id(ins) not in dead]
             return program.with_body(new_body)

@@ -14,7 +14,10 @@ Catalog decisions made here (the "physical optimizer"):
     two tiers as the ``groupby: sorted | direct`` strategy Choice and the
     cost model picks (NDV/domain decides, like gather-vs-exchange);
   * Join → SortByKey(build side) + MergeJoinSorted (sort-based PK-FK join —
-    the TPU-native rewrite of BuildHTable/ProbeHTable, DESIGN.md §2);
+    the TPU-native rewrite of BuildHTable/ProbeHTable, DESIGN.md §2), or —
+    under ``join="hash"``, when the statistics bound the joint key domain —
+    the sort-FREE ``vec.HashJoinDirect`` (dense direct-table probe, O(n));
+    the driver exposes the tiers as the ``join: sorted | hash`` Choice;
     multi-column join keys get catalog-derived ``key_domains`` so the
     composite packing is collision-checked instead of 16-bit truncated;
   * higher-order instructions are reconstructed recursively with re-derived
@@ -64,15 +67,25 @@ class LowerRelToVec:
     (vec.GroupAggDirect dense buckets — used per instruction whenever the
     propagated statistics bound the key domain, falling back to sorted
     otherwise).
+
+    ``join`` selects the physical join tier the same way: ``"sorted"``
+    (SortByKey(build) + MergeJoinSorted, always valid) or ``"hash"``
+    (vec.HashJoinDirect dense direct table — per instruction, when the
+    statistics bound the joint key domain; unbounded-but-small domains get
+    the dynamic-bounds variant with an in-trace fallback to sorted).
     """
 
     name = "lower-rel-to-vec"
 
-    def __init__(self, catalog: Catalog, groupby: str = "sorted") -> None:
+    def __init__(self, catalog: Catalog, groupby: str = "sorted",
+                 join: str = "sorted") -> None:
         if groupby not in ("sorted", "direct"):
             raise ValueError(f"unknown groupby tier {groupby!r}")
+        if join not in ("sorted", "hash"):
+            raise ValueError(f"unknown join tier {join!r}")
         self.catalog = catalog
         self.groupby = groupby
+        self.join = join
         self._env: Any = None  # StatsEnv over the SOURCE program tree
 
     def apply(self, program: Program, input_types: Optional[Sequence[ItemType]] = None) -> Program:
@@ -99,6 +112,44 @@ class LowerRelToVec:
                 return None
             out.append((int(d[0]), int(d[1])))
         return tuple(out)
+
+    # ------------------------------------------------------------------
+    def _check_pkfk(self, program: Program, ins: Instruction,
+                    right_on: Sequence[str]) -> None:
+        """Surface the physical joins' silent PK-FK assumption.
+
+        Every vec join tier (sorted merge and dense direct table alike)
+        produces at most ONE match per probe row — correct only when the
+        build side's keys are unique.  When the propagated NDV says the
+        build side has duplicate keys, or there are no statistics to check
+        against, emit a structured warning instead of silently dropping
+        matches (mirrors ``lower_vec.direct_unavailable``).
+        """
+        from ...obs.trace import warn_event
+        keys = ",".join(right_on)
+        if self._env is None:
+            warn_event("lower_vec.join_pkfk_unverified", keys=keys,
+                       reason="no catalog statistics to verify build-side "
+                              "key uniqueness")
+            return
+        rs = self._env.get(program, ins.inputs[1])
+        distinct = 1.0
+        for c in right_on:
+            ndv = rs.ndv_of(c)
+            if ndv is None:
+                warn_event("lower_vec.join_pkfk_unverified", keys=keys,
+                           reason=f"no NDV estimate for build key {c!r}")
+                return
+            distinct *= float(ndv)
+        distinct = min(distinct, rs.rows)
+        if distinct + 0.5 < rs.rows:
+            warn_event(
+                "lower_vec.join_pkfk_unverified", keys=keys,
+                rows=int(rs.rows), distinct=int(distinct),
+                reason=f"build side has ~{rs.rows:,.0f} rows but only "
+                       f"~{distinct:,.0f} distinct keys — duplicate matches "
+                       "will be dropped (PK-FK join keeps one per probe row)",
+            )
 
     # ------------------------------------------------------------------
     def _lower(self, program: Program, new_input_types: Optional[List[ItemType]]) -> Program:
@@ -179,19 +230,52 @@ class LowerRelToVec:
             left_on = tuple(params["left_on"])
             right_on = tuple(params["right_on"])
             left_cap = left.type.attr("max_count")
+            right_cap = right.type.attr("max_count")
             out_cap = int(left_cap * self.catalog.join_selectivity)
+            self._check_pkfk(src_program, ins, right_on)
             join_params: Dict[str, Any] = {
                 "left_on": left_on, "right_on": right_on, "max_count": out_cap,
             }
-            if len(left_on) > 1:
+            # joint per-column bounds over both sides (packing must agree)
+            ld = self._reg_domains(src_program, ins.inputs[0], left_on)
+            rd = self._reg_domains(src_program, ins.inputs[1], right_on)
+            joint = None
+            if ld is not None and rd is not None:
+                joint = tuple((min(a[0], c[0]), max(a[1], c[1]))
+                              for a, c in zip(ld, rd))
+            if self.join == "hash":
+                if joint is not None:
+                    n_buckets = 1
+                    for lo, hi in joint:
+                        n_buckets *= hi - lo + 1
+                    if 0 < n_buckets <= MAX_DIRECT_BUCKETS:
+                        return b.emit("vec.HashJoinDirect", [left, right], {
+                            **join_params, "key_domains": joint,
+                        })
+                    # bounded but oversized: the direct table would dominate —
+                    # surface the downgrade to sorted (mirrors
+                    # lower_vec.direct_unavailable for group-by)
+                    from ...obs.trace import warn_event
+                    warn_event(
+                        "lower_vec.hash_unavailable",
+                        keys=",".join(left_on),
+                        num_buckets=n_buckets,
+                        max_buckets=MAX_DIRECT_BUCKETS,
+                        reason=f"join key domain too large ({n_buckets:,} "
+                               f"buckets > {MAX_DIRECT_BUCKETS:,})",
+                    )
+                else:
+                    # unbounded domain: dynamic-bounds variant — the bucket
+                    # budget is static, the fit check and the fallback to the
+                    # sorted merge happen inside the trace per instruction
+                    budget = min(MAX_DIRECT_BUCKETS, max(4 * int(right_cap), 1024))
+                    return b.emit("vec.HashJoinDirect", [left, right], {
+                        **join_params, "num_buckets": budget,
+                    })
+            if len(left_on) > 1 and joint is not None:
                 # catalog bounds let the composite key pack without 16-bit
                 # truncation (joint bounds over both sides)
-                ld = self._reg_domains(src_program, ins.inputs[0], left_on)
-                rd = self._reg_domains(src_program, ins.inputs[1], right_on)
-                if ld is not None and rd is not None:
-                    join_params["key_domains"] = tuple(
-                        (min(a[0], c[0]), max(a[1], c[1]))
-                        for a, c in zip(ld, rd))
+                join_params["key_domains"] = joint
             rs = b.emit1("vec.SortByKey", [right], {"keys": right_on})
             return b.emit("vec.MergeJoinSorted", [left, rs], join_params)
         if op == "rel.OrderBy":

@@ -24,6 +24,7 @@ from ..core.expr import AggSpec, Expr
 from . import ref
 from .flash_attention import flash_attention_p
 from .fused_select_agg import LANES, fused_select_agg_p
+from .grouped_join_agg import grouped_join_agg_p
 from .grouped_select_agg import grouped_select_agg_p
 from .kmeans_step import kmeans_step_p
 from .segsum import segsum_p
@@ -105,6 +106,102 @@ def grouped_select_agg(table, pred: Optional[Expr], keys: Sequence[str],
     out_cols = rt.decode_bucket_keys(keys, key_domains,
                                      [table.cols[k].dtype for k in keys],
                                      num_buckets)
+    for j, a in enumerate(aggs):
+        lane = lane_accs[j + 1]
+        if a.fn in ("sum", "count"):
+            red = jnp.sum(lane, axis=1)
+        elif a.fn == "min":
+            red = jnp.min(lane, axis=1)
+        else:
+            red = jnp.max(lane, axis=1)
+        red = red[:num_buckets]
+        if a.fn == "count":
+            red = red.astype(jnp.int32)
+        else:
+            # empty-bucket min/max: finite kernel sentinels back to ±inf
+            red = jnp.where(red >= 3.0e38, jnp.inf,
+                            jnp.where(red <= -3.0e38, -jnp.inf, red))
+        out_cols[a.name] = red
+    buckets = rt.VecTable(out_cols, counts > 0)
+    return rt.compact(buckets, max_groups)
+
+
+def grouped_join_agg(left, right, *, left_on: Sequence[str],
+                     right_on: Sequence[str],
+                     join_key_domains: Sequence[Tuple[int, int]],
+                     join_num_buckets: int, keys: Sequence[str],
+                     aggs: Sequence[AggSpec], max_groups: int,
+                     key_domains: Sequence[Tuple[int, int]],
+                     num_buckets: int, pred: Optional[Expr] = None,
+                     block_rows: int = 256, interpret: bool = True):
+    """(probe VecTable, build VecTable) → Vec⟨keys+aggs⟩, one fused kernel.
+
+    The whole select→join→group pipeline (``vec.FusedJoinGroupAgg`` under
+    ``use_kernels``): the build side is condensed OUTSIDE the kernel into
+    dense per-join-bucket tables (presence + one f32 value per needed
+    column, duplicate keys → lowest row index, matching the unfused tiers);
+    the kernel then runs predicate, probe, group-bucket derivation and all
+    accumulators blockwise in a single pass — the join result is never
+    materialized.  The tiny epilogue (cross-lane reduce, key decode,
+    compaction to ``max_groups``) runs outside the kernel.
+    """
+    from ..relational import runtime as rt
+
+    keys = tuple(keys)
+    aggs = tuple(aggs)
+    agg_fields = {f for a in aggs for f in a.expr.fields() if a.fn != "count"}
+    pred_fields = set(pred.fields()) if pred is not None else set()
+    rnames = tuple(sorted((set(keys) | agg_fields)
+                          & (set(right.cols) - set(right_on))))
+    lnames = tuple(sorted((pred_fields | set(left_on)
+                           | ((set(keys) | agg_fields) & set(left.cols)))))
+
+    cap = left.capacity
+    rows = -(-cap // LANES)  # ceil
+    rows = -(-rows // block_rows) * block_rows
+    total = rows * LANES
+
+    def to_lanes(arr):
+        return _pad_rows(arr, total).reshape(rows, LANES)
+
+    cols = tuple(to_lanes(left.cols[n].astype(jnp.float32)
+                          if jnp.issubdtype(left.cols[n].dtype, jnp.floating)
+                          else left.cols[n]) for n in lnames)
+    valid = to_lanes(left.valid)
+
+    # dense build tables over the join-bucket axis (first occurrence wins)
+    nbj = int(join_num_buckets)
+    nbj_pad = max(8, nbj)
+    cap_r = right.capacity
+    rbid, rok = rt._bucket_ids_checked(right, right_on, join_key_domains)
+    slot = jnp.where(rok & right.valid, rbid, nbj)
+    ridx = jnp.full((nbj + 1,), cap_r, jnp.int32)
+    ridx = ridx.at[slot].min(jnp.arange(cap_r, dtype=jnp.int32),
+                             mode="drop")[:nbj]
+    present_b = ridx < cap_r
+    ridx_c = jnp.minimum(ridx, cap_r - 1)
+
+    def to_table(arr):
+        vals = jnp.where(present_b, arr[ridx_c].astype(jnp.float32), 0.0)
+        return jnp.pad(vals, (0, nbj_pad - nbj))[:, None]
+
+    present = to_table(present_b)
+    rtabs = tuple(to_table(right.cols[n]) for n in rnames)
+
+    jkey_specs = tuple((k, int(lo), int(hi) - int(lo) + 1)
+                       for k, (lo, hi) in zip(left_on, join_key_domains))
+    gkey_specs = tuple((k, int(lo), int(hi) - int(lo) + 1)
+                       for k, (lo, hi) in zip(keys, key_domains))
+    lane_accs = grouped_join_agg_p(
+        cols, valid, present, rtabs, pred=pred, aggs=aggs,
+        lnames=lnames, rnames=rnames, jkey_specs=jkey_specs,
+        gkey_specs=gkey_specs, num_join_buckets=nbj, num_buckets=num_buckets,
+        block_rows=block_rows, interpret=interpret)
+
+    counts = jnp.sum(lane_accs[0], axis=1)[:num_buckets]
+    key_dtypes = [left.cols[k].dtype if k in left.cols else right.cols[k].dtype
+                  for k in keys]
+    out_cols = rt.decode_bucket_keys(keys, key_domains, key_dtypes, num_buckets)
     for j, a in enumerate(aggs):
         lane = lane_accs[j + 1]
         if a.fn in ("sum", "count"):

@@ -45,7 +45,8 @@ TAPPED_OPS = frozenset({
     # vec flavor (local/spmd jitted bodies)
     "vec.ScanVec", "vec.MaskSelect", "vec.GroupAggSorted",
     "vec.GroupAggDirect", "vec.FusedSelectAgg", "vec.AggrVec",
-    "vec.MergeJoinSorted", "vec.Compact", "vec.TopKVec", "vec.LimitVec",
+    "vec.MergeJoinSorted", "vec.HashJoinDirect", "vec.FusedJoinGroupAgg",
+    "vec.Compact", "vec.TopKVec", "vec.LimitVec",
     # rel flavor (interpreter)
     "rel.Scan", "rel.Select", "rel.GroupByAggr", "rel.Aggr", "rel.Join",
     "rel.Limit", "rel.Distinct",

@@ -378,6 +378,161 @@ def merge_join_sorted(left: VecTable, right: VecTable, left_on: Sequence[str],
     return joined
 
 
+def _bucket_ids_checked(t: VecTable, keys: Sequence[str],
+                        key_domains: Sequence[Tuple[int, int]],
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Dense bucket id per row + an in-domain mask.
+
+    Unlike :func:`bucket_ids` (which clips — fine for grouping, where the
+    catalog domains are exact by construction), joins must KNOW whether a
+    key was inside the declared domain: a clipped out-of-domain probe key
+    would silently alias the boundary bucket and fabricate a match.
+    """
+    acc = jnp.zeros((t.capacity,), jnp.int32)
+    ok = jnp.ones((t.capacity,), bool)
+    for k, (lo, hi) in zip(keys, key_domains):
+        size = int(hi) - int(lo) + 1
+        arr = _int_key(t.cols[k]) - jnp.int32(lo)
+        ok = ok & (arr >= 0) & (arr < size)
+        acc = acc * jnp.int32(size) + jnp.clip(arr, 0, size - 1)
+    return acc, ok
+
+
+def _direct_probe(left: VecTable, right: VecTable, right_on: Sequence[str],
+                  num_buckets: int, lbid: jax.Array, lok: jax.Array,
+                  rbid: jax.Array, rok: jax.Array,
+                  columns: Optional[Sequence[str]] = None) -> VecTable:
+    """Dense direct-table probe shared by the hash-join tiers.
+
+    Build: scatter each valid right row's index into its key bucket with a
+    ``min`` combiner — deterministic under duplicate build keys (the lowest
+    row index wins, matching searchsorted's first occurrence).  Probe: one
+    O(1) gather per left row.  Bucket ids are collision-free within the
+    domain (bijective packing), so no key re-verification is needed; rows
+    outside the domain are masked via ``lok``/``rok``.  Output rows stay at
+    ``left.capacity`` (caller compacts).  ``columns`` optionally restricts
+    which right columns are gathered (fusion gathers only what the
+    downstream aggregation reads).
+    """
+    cap_r = right.capacity
+    slot = jnp.where(rok & right.valid, rbid, num_buckets)
+    table = jnp.full((num_buckets + 1,), cap_r, jnp.int32)
+    table = table.at[slot].min(jnp.arange(cap_r, dtype=jnp.int32), mode="drop")
+    idx = table[jnp.clip(lbid, 0, num_buckets - 1)]
+    match = left.valid & lok & (idx < cap_r)
+    idx_c = jnp.minimum(idx, cap_r - 1)
+    out = dict(left.cols)
+    lnames = set(left.cols)
+    for k, v in right.cols.items():
+        if k in right_on or (columns is not None and k not in columns):
+            continue
+        name = k if k not in lnames else k + "_r"
+        out[name] = v[idx_c]
+    return VecTable(out, match)
+
+
+def hash_join_direct(left: VecTable, right: VecTable, left_on: Sequence[str],
+                     right_on: Sequence[str], max_count: int,
+                     key_domains: Optional[Sequence[Tuple[int, int]]] = None,
+                     num_buckets: Optional[int] = None) -> VecTable:
+    """Sort-free PK-FK inner equi-join via a dense direct table.
+
+    The O(n) sibling of :func:`merge_join_sorted` — no sort of the build
+    side, no searchsorted: when the composite key domain is bounded, the
+    build side scatters into a dense table indexed by bucket id and every
+    probe is a single gather (the dense-bucket analogue of BuildHTable /
+    ProbeHTable, exactly as GroupAggDirect is to hash aggregation).
+
+    Two variants:
+
+    * static ``key_domains`` (catalog-derived): bucket ids are checked
+      against the declared domain, out-of-domain rows never match;
+    * dynamic (``key_domains=None``): per-column bounds are traced jointly
+      from both sides; when the traced domain product exceeds the static
+      ``num_buckets`` budget the instruction falls back to the sorted merge
+      join *inside* the trace (``lax.cond``), so the plan stays valid for
+      any data.
+    """
+    if key_domains is not None:
+        nb = 1
+        for lo, hi in key_domains:
+            nb *= int(hi) - int(lo) + 1
+        lbid, lok = _bucket_ids_checked(left, left_on, key_domains)
+        rbid, rok = _bucket_ids_checked(right, right_on, key_domains)
+        joined = _direct_probe(left, right, right_on, nb, lbid, lok, rbid, rok)
+        if max_count != left.capacity:
+            joined = compact(joined, max_count)
+        return joined
+
+    if num_buckets is None:
+        raise ValueError("hash_join_direct without key_domains needs a "
+                         "static num_buckets budget")
+    nb = int(num_buckets)
+    lows, sizes = _joint_key_bounds(left, right, left_on, right_on)
+    prod = jnp.ones((), jnp.float32)
+    for s in sizes:
+        prod = prod * s.astype(jnp.float32)  # f32: no i32 overflow on product
+    fits = prod <= jnp.float32(nb)
+
+    def _dyn_bid(t: VecTable, keys: Sequence[str]) -> jax.Array:
+        acc = jnp.zeros((t.capacity,), jnp.int32)
+        for k, lo, size in zip(keys, lows, sizes):
+            arr = _int_key(t.cols[k]) - lo.astype(jnp.int32)
+            acc = acc * size.astype(jnp.int32) \
+                + jnp.clip(arr, 0, size.astype(jnp.int32) - 1)
+        return acc
+
+    def _direct(args):
+        l, r = args
+        # joint bounds cover every valid row of both sides by construction
+        lbid = _dyn_bid(l, left_on)
+        rbid = _dyn_bid(r, right_on)
+        lok = jnp.ones((l.capacity,), bool)
+        rok = jnp.ones((r.capacity,), bool)
+        return _direct_probe(l, r, right_on, nb, lbid, lok, rbid, rok)
+
+    def _sorted(args):
+        l, r = args
+        rs = sort_by_key(r, right_on)
+        return merge_join_sorted(l, rs, left_on, right_on, l.capacity)
+
+    joined = jax.lax.cond(fits, _direct, _sorted, (left, right))
+    if max_count != left.capacity:
+        joined = compact(joined, max_count)
+    return joined
+
+
+def fused_join_group_agg(left: VecTable, right: VecTable,
+                         left_on: Sequence[str], right_on: Sequence[str],
+                         join_key_domains: Sequence[Tuple[int, int]],
+                         join_num_buckets: int, keys: Sequence[str],
+                         aggs: Sequence[AggSpec], max_groups: int,
+                         key_domains: Sequence[Tuple[int, int]],
+                         num_buckets: int, pred: Optional[Expr] = None,
+                         ) -> VecTable:
+    """Whole-pipeline select→join→group in one pass, join never materialized.
+
+    Predicate, direct-table probe, bucket id and all accumulators are
+    computed per input row; only the right columns the grouping actually
+    reads are gathered, and the joined rows go straight into the dense
+    grouped reduction without an intermediate compact.
+    """
+    valid = left.valid
+    if pred is not None:
+        valid = valid & evaluate(pred, left.cols, jnp)
+    lbid, lok = _bucket_ids_checked(left, left_on, join_key_domains)
+    rbid, rok = _bucket_ids_checked(right, right_on, join_key_domains)
+    needed = set(keys)
+    for a in aggs:
+        if a.fn != "count":
+            needed.update(a.expr.fields())
+    joined = _direct_probe(VecTable(left.cols, valid), right, right_on,
+                           join_num_buckets, lbid, lok, rbid, rok,
+                           columns=sorted(needed))
+    return group_agg_direct(joined, keys, aggs, max_groups, key_domains,
+                            num_buckets)
+
+
 def _joint_key_bounds(left: VecTable, right: VecTable, left_on: Sequence[str],
                       right_on: Sequence[str]) -> Tuple[List[jax.Array], List[jax.Array]]:
     """Shared per-column (lo, size) over the valid rows of BOTH join sides —

@@ -109,6 +109,23 @@ def _scratch_bytes(ins: Instruction) -> int:
         out = ins.outputs[0].type
         bpr = item_nbytes(out.item, 8) if is_coll(out) else 8
         return n_buckets * bpr
+    if op == "vec.HashJoinDirect":
+        # the direct table: one int32 build-row index per join bucket
+        # (plus the out-of-domain spill slot)
+        nb = ins.param("num_buckets")
+        domains = ins.param("key_domains")
+        if domains is not None:
+            nb = 1
+            for lo, hi in domains:
+                nb *= int(hi) - int(lo) + 1
+        return (int(nb or 0) + 1) * 4
+    if op == "vec.FusedJoinGroupAgg":
+        # direct join table + the dense group-bucket accumulator rows
+        nbj = int(ins.param("join_num_buckets") or 0)
+        nbg = int(ins.param("num_buckets") or 0)
+        out = ins.outputs[0].type
+        bpr = item_nbytes(out.item, 8) if is_coll(out) else 8
+        return (nbj + 1) * 4 + nbg * bpr
     if op == "vec.SortByKey":
         # permutation indices + a gathered copy of the block
         return sum(_reg_bytes(r) for r in ins.inputs)

@@ -13,6 +13,7 @@ the adventurous variant is —
 
     as chosen
       → groupby=sorted          (no dense-bucket allocation)
+      → join=sorted              (no direct-table join scratch)
       → fuse=unfused            (no fused Pallas kernels)
       → grouped-recombine=gather (no mesh exchange collective)
       → target=interp            (reference semantics, off the fast path)
@@ -36,6 +37,7 @@ __all__ = ["DegradedWarning", "SAFE_VARIANTS", "INTERP_RUNG",
 #: rung of the fallback chain forces one more of these
 SAFE_VARIANTS: Tuple[Tuple[str, str], ...] = (
     ("groupby", "sorted"),
+    ("join", "sorted"),
     ("fuse", "unfused"),
     ("grouped-recombine", "gather"),
 )
@@ -58,16 +60,17 @@ def fallback_ladder(chosen: Mapping[str, str],
     """
     names = (set(choice_names) if choice_names is not None
              else {k for k, _ in SAFE_VARIANTS})
-    forced: Dict[str, str] = dict(chosen)
-    previous = dict(chosen)
+    previous: Dict[str, str] = dict(chosen)
     for name, safe in SAFE_VARIANTS:
         if name not in names:
             continue
-        forced = dict(forced)
-        forced[name] = safe
-        if forced == previous:
+        # a choice absent from the failing strategy was at its default —
+        # forcing the safe label would re-lower the identical plan
+        if previous.get(name, safe) == safe:
             continue  # already at (or below) this rung — nothing new to try
-        previous = dict(forced)
+        forced = dict(previous)
+        forced[name] = safe
+        previous = forced
         yield f"{name}={safe}", dict(forced)
     yield INTERP_RUNG, None
 

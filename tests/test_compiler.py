@@ -149,11 +149,11 @@ class TestTargets:
     def test_target_declares_lowering_path(self):
         spmd = get_target("spmd")
         names = [s.name for s in spmd.lowering_path]
-        assert names == ["canonicalize", "parallelize", "groupby",
+        assert names == ["canonicalize", "parallelize", "groupby", "join",
                          "fuse", "lower-to-mesh", "grouped-recombine"]
         assert "mesh" in spmd.flavors
         # the strategy points the cost-based optimizer may search over
-        assert [c.name for c in spmd.choices()] == ["groupby", "fuse",
+        assert [c.name for c in spmd.choices()] == ["groupby", "join", "fuse",
                                                     "grouped-recombine"]
 
     def test_unknown_target_raises(self):

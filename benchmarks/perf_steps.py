@@ -31,7 +31,10 @@ with its own <5% overhead guard plus the fault-recovery wall time;
 --join-bench runs the BENCH_8.json join-strategy benchmark: sorted vs
 hash direct-table joins at low and high NDV, the costed decisions, and
 the fused select→join→group pipeline vs its unfused plan with a
-streaming-bandwidth roofline check.)
+streaming-bandwidth roofline check; --dict-bench runs the BENCH_9.json
+dictionary-encoding benchmark: string and sparse-integer group-by/join
+keys through the dict-encoded direct tiers vs the sorted tiers, the
+costed encode=raw|dict decisions, and oracle checks in both directions.)
 """
 
 import json
@@ -367,6 +370,243 @@ def join_bench_report(reps: int = 15):
             and entry["speedup_fused"] > 1.0 and oracle_ok)
 
 
+def _dict_cells():
+    """The four dictionary-encoding cells for BENCH_9.
+
+    A: Q1-shaped group-by on a low-cardinality *string* key (64 cities over
+       2^17 rows) — dictionary ranks unlock the sort-free direct tier and
+       the costed search must pick it.
+    B: the same shape with every key distinct (~2^21 keys) — over
+       ``DICT_MAX_CARD``, so no per-column dictionary exists, *and* over
+       ``MAX_DIRECT_BUCKETS`` even as global codes, so the direct tier
+       stays off and cost must keep sorted/raw.  (Below 2^20 distinct
+       strings the global-code domain is itself direct-eligible — the
+       encoding moves the sorted handoff from 2^20 raw span to 2^20
+       *distinct values*.)
+    C: sparse integer keys (512 distinct over a ~1.5e9 span) — the raw span
+       overflows ``MAX_DIRECT_BUCKETS`` but the ``vec.DictEncode`` sandwich
+       shrinks it to 512 ranks.
+    D: a Q3-shaped string join (2^17 probe rows against 2^14 build keys)
+       followed by a small group-by — ranks make the direct-table join
+       available on string keys.
+
+    Each cell gets its own :class:`Context` so each builds its own global
+    string dictionary.
+    """
+    import numpy as np
+    from repro.frontends.dataflow import Context, count_, sum_
+
+    rng = np.random.default_rng(31)
+    n = 1 << 17
+    cells = {}
+
+    # A — low-cardinality strings
+    card_a = 64
+    cities = np.array([f"city-{i:03d}" for i in range(card_a)])
+    ctx_a = Context(pad_to=1024)
+    ctx_a.register("sales", {
+        "city": cities[rng.integers(0, card_a, n)],
+        "amount": rng.gamma(2.0, 50.0, n).astype(np.float32),
+    })
+    q_a = (ctx_a.table("sales").group_by("city", max_groups=card_a)
+           .agg(sum_("amount").as_("rev"), count_().as_("n")))
+    cells["low_card_string"] = (ctx_a, n, card_a, q_a)
+
+    # B — high-cardinality strings (> MAX_DIRECT_BUCKETS even as codes)
+    nb = 1 << 21
+    card_b = nb
+    users = np.char.add("user-", np.arange(nb).astype(str))
+    ctx_b = Context(pad_to=1024)
+    ctx_b.register("sales", {
+        "city": users,
+        "amount": rng.gamma(2.0, 50.0, nb).astype(np.float32),
+    })
+    q_b = (ctx_b.table("sales").group_by("city", max_groups=nb)
+           .agg(sum_("amount").as_("rev"), count_().as_("n")))
+    cells["high_card_string"] = (ctx_b, nb, card_b, q_b)
+
+    # C — sparse integer keys
+    card_c = 512
+    domain = rng.integers(0, 1_500_000_000, card_c).astype(np.int32)
+    ctx_c = Context(pad_to=1024)
+    ctx_c.register("sales", {
+        "city": domain[rng.integers(0, card_c, n)],
+        "amount": rng.gamma(2.0, 50.0, n).astype(np.float32),
+    })
+    q_c = (ctx_c.table("sales").group_by("city", max_groups=card_c)
+           .agg(sum_("amount").as_("rev"), count_().as_("n")))
+    cells["sparse_int"] = (ctx_c, n, card_c, q_c)
+
+    # D — Q3-shaped string join
+    m = 1 << 14
+    skus = np.array([f"sku-{i:05d}" for i in range(m)])
+    ctx_d = Context(pad_to=1024)
+    ctx_d.register("lineitem", {
+        "sku": skus[rng.integers(0, m, n)],
+        "qty": rng.integers(1, 50, n).astype(np.int32),
+        "price": rng.gamma(2.0, 100.0, n).astype(np.float32),
+    })
+    ctx_d.register("parts", {
+        "psku": skus,
+        "seg": rng.integers(0, 8, m).astype(np.int32),
+    })
+    q_d = (ctx_d.table("lineitem")
+           .join(ctx_d.table("parts"), left_on=("sku",), right_on=("psku",))
+           .group_by("seg", max_groups=8)
+           .agg(sum_("price").as_("rev"), count_().as_("cnt")))
+    cells["string_join"] = (ctx_d, n, m, q_d)
+    return cells
+
+
+def dict_bench_report(reps: int = 15):
+    """Dictionary-encoded direct tiers vs sorted on string/sparse keys →
+    BENCH_9.json.
+
+    Per cell: forced ``encode=raw`` sorted tier vs forced dict-encoded
+    direct tier wall times (best-of-N), what ``optimize="cost"`` actually
+    chose, and an oracle check of both physical plans.  Cells A/C/D check
+    against the interp oracle; cell B's ~70k-group aggregation is
+    intractable for the O(groups×rows) reference interpreter, so it checks
+    against a vectorized numpy oracle (recorded as ``oracle: "numpy"``).
+    The dict-direct plan of cell A also gets a streaming-bandwidth
+    roofline.
+    """
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import warnings
+
+    import numpy as np
+    import jax
+    from repro.compiler import PlanCache
+    from benchmarks.roofline import kernel_roofline, streaming_peak_gbps
+
+    cells = _dict_cells()
+
+    def best_wall_us(ctx, res):
+        sources = ctx.sources()
+        jax.block_until_ready(res(sources))  # compile + warm
+        walls = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(res(sources))
+            walls.append(time.perf_counter() - t0)
+        return float(min(walls) * 1e6)
+
+    def numpy_oracle(ctx, table="sales", key="city", val="amount"):
+        cols = ctx.tables[table]
+        keys, inv = np.unique(cols[key], return_inverse=True)
+        rev = np.zeros(len(keys), np.float64)
+        np.add.at(rev, inv, cols[val].astype(np.float64))
+        cnt = np.bincount(inv, minlength=len(keys))
+        return {"city": keys, "rev": rev, "n": cnt}
+
+    def oracle_matches(want, got, int_cols=("n", "cnt")):
+        ow = np.argsort(np.asarray(want["city" if "city" in want else "seg"]
+                                   ).ravel())
+        og = np.argsort(np.asarray(got["city" if "city" in got else "seg"]
+                                   ).ravel())
+        ok = True
+        for k in want:
+            w = np.asarray(want[k]).ravel()[ow]
+            g = np.asarray(got[k]).ravel()[og]
+            if k in int_cols or g.dtype.kind in ("U", "S", "O", "i"):
+                ok &= bool(np.array_equal(g.astype(w.dtype), w))
+            else:
+                ok &= bool(np.allclose(g, w, rtol=1e-3))
+        return ok
+
+    record = {"bench": "dict_encoding", "reps": reps,
+              "peak_gbps": streaming_peak_gbps()}
+    groupby_cells = ("low_card_string", "high_card_string", "sparse_int")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        for cell in groupby_cells:
+            ctx, rows, card, q = cells[cell]
+            entry = {"rows": rows, "key_cardinality": card}
+            raw = ctx.compile(q, strategy={"groupby": "sorted",
+                                           "encode": "raw"},
+                              cache=PlanCache())
+            dct = ctx.compile(q, strategy={"groupby": "direct",
+                                           "encode": "dict"},
+                              cache=PlanCache())
+            entry["sorted_raw_us"] = best_wall_us(ctx, raw)
+            entry["direct_dict_us"] = best_wall_us(ctx, dct)
+            entry["direct_dict_ops"] = sorted(set(dct.program.opcodes()))
+            entry["speedup_dict"] = (entry["sorted_raw_us"]
+                                     / entry["direct_dict_us"])
+            decided = ctx.compile(q, optimize="cost", cache=PlanCache())
+            entry["decision"] = {k: v for k, v in dict(decided.strategy
+                                                       ).items()
+                                 if k in ("groupby", "encode")}
+            if cell == "high_card_string":
+                entry["oracle"] = "numpy"
+                want = numpy_oracle(ctx)
+            else:
+                entry["oracle"] = "interp"
+                want = ctx.execute(q, target="interp")
+            for label, strat in (("sorted_raw", {"groupby": "sorted",
+                                                 "encode": "raw"}),
+                                 ("direct_dict", {"groupby": "direct",
+                                                  "encode": "dict"})):
+                got = ctx.execute(q, target="local", strategy=strat)
+                entry[f"oracle_ok_{label}"] = oracle_matches(want, got)
+            if cell == "low_card_string":
+                # dict-direct moves the i32 code column + f32 values once,
+                # plus the compacted card-sized bucket epilogue
+                entry["roofline"] = kernel_roofline(
+                    bytes_moved=rows * 8 + card * 12,
+                    wall_s=entry["direct_dict_us"] / 1e6,
+                    peak_gbps=record["peak_gbps"])
+            record[cell] = entry
+            print(f"[perf] dict {cell}: sorted/raw "
+                  f"{entry['sorted_raw_us']:.0f} us, direct/dict "
+                  f"{entry['direct_dict_us']:.0f} us "
+                  f"({entry['speedup_dict']:.2f}x), cost picks "
+                  f"{entry['decision']}", flush=True)
+
+        # D — the string join
+        ctx, rows, m, q = cells["string_join"]
+        entry = {"rows": rows, "build_keys": m}
+        raw = ctx.compile(q, strategy={"join": "sorted", "encode": "raw"},
+                          cache=PlanCache())
+        dct = ctx.compile(q, strategy={"join": "hash", "encode": "dict"},
+                          cache=PlanCache())
+        entry["sorted_raw_us"] = best_wall_us(ctx, raw)
+        entry["hash_dict_us"] = best_wall_us(ctx, dct)
+        entry["hash_dict_ops"] = sorted(set(dct.program.opcodes()))
+        entry["speedup_dict"] = entry["sorted_raw_us"] / entry["hash_dict_us"]
+        decided = ctx.compile(q, optimize="cost", cache=PlanCache())
+        entry["decision"] = {k: v for k, v in dict(decided.strategy).items()
+                             if k in ("join", "encode")}
+        entry["oracle"] = "interp"
+        want = ctx.execute(q, target="interp")
+        for label, strat in (("sorted_raw", {"join": "sorted",
+                                             "encode": "raw"}),
+                             ("hash_dict", {"join": "hash",
+                                            "encode": "dict"})):
+            got = ctx.execute(q, target="local", strategy=strat)
+            entry[f"oracle_ok_{label}"] = oracle_matches(want, got)
+        record["string_join"] = entry
+        print(f"[perf] dict string_join: sorted/raw "
+              f"{entry['sorted_raw_us']:.0f} us, hash/dict "
+              f"{entry['hash_dict_us']:.0f} us "
+              f"({entry['speedup_dict']:.2f}x), cost picks "
+              f"{entry['decision']}", flush=True)
+
+    (ROOT / "BENCH_9.json").write_text(json.dumps(record, indent=2))
+    print(f"[perf] wrote {ROOT / 'BENCH_9.json'}")
+    low = record["low_card_string"]
+    high = record["high_card_string"]
+    oracle_ok = all(v for c in ("low_card_string", "high_card_string",
+                                "sparse_int", "string_join")
+                    for k, v in record[c].items()
+                    if k.startswith("oracle_ok_"))
+    return (low["decision"] == {"groupby": "direct", "encode": "dict"}
+            and low["speedup_dict"] >= 2.0
+            and high["decision"].get("groupby") == "sorted"
+            and high["decision"].get("encode", "raw") == "raw"
+            and oracle_ok)
+
+
 def trace_report(reps: int = 30):
     """Traced executions → Chrome traces + BENCH_6.json.
 
@@ -540,6 +780,10 @@ def main():
         return
     if "--join-bench" in sys.argv:
         if not join_bench_report():
+            sys.exit(1)
+        return
+    if "--dict-bench" in sys.argv:
+        if not dict_bench_report():
             sys.exit(1)
         return
     compile_pass_report()

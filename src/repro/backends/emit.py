@@ -189,6 +189,18 @@ def _groupagg_direct(ctx, ins, args):
     return [rt.group_agg_direct(t, keys, aggs, mg, domains, nb, pred=pred)]
 
 
+@emitter("vec.DictEncode")
+def _dictencode(ctx, ins, args):
+    return [rt.dict_encode(args[0], ins.param("cols"), ins.param("modes"),
+                           ins.param("tables"), ins.param("lows"),
+                           ins.param("cards"))]
+
+
+@emitter("vec.DictDecode")
+def _dictdecode(ctx, ins, args):
+    return [rt.dict_decode(args[0], ins.param("cols"), ins.param("tables"))]
+
+
 @emitter("vec.MergeJoinSorted")
 def _mergejoin(ctx, ins, args):
     return [rt.merge_join_sorted(args[0], args[1], ins.param("left_on"),

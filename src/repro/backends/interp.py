@@ -236,6 +236,40 @@ def _vec_groupagg_direct(interp, ins, args):
     return _groupby(interp, ins, [t])
 
 
+@impl("vec.DictEncode")
+def _vec_dictencode(interp, ins, args):
+    """Reference semantics of the rank encoding: value→rank against the
+    sorted dictionary, out-of-dictionary → sentinel rank ``card``."""
+    (t,) = args
+    out = dict(t)
+    for c, mode, table, lo, card in zip(
+            ins.param("cols"), ins.param("modes"), ins.param("tables"),
+            ins.param("lows"), ins.param("cards")):
+        a = np.asarray(t[c])
+        tab = np.asarray(table)
+        if mode == "remap":
+            idx = a.astype(np.int64) - int(lo)
+            ok = (idx >= 0) & (idx < tab.shape[0])
+            ranks = tab[np.clip(idx, 0, tab.shape[0] - 1)]
+            out[c] = np.where(ok, ranks, card).astype(np.int32)
+        else:
+            i = np.searchsorted(tab, a)
+            ic = np.clip(i, 0, card - 1)
+            out[c] = np.where(tab[ic] == a, ic, card).astype(np.int32)
+    return [out]
+
+
+@impl("vec.DictDecode")
+def _vec_dictdecode(interp, ins, args):
+    (t,) = args
+    out = dict(t)
+    for c, table in zip(ins.param("cols"), ins.param("tables")):
+        tab = np.asarray(table)
+        ranks = np.clip(np.asarray(t[c]).astype(np.int64), 0, tab.shape[0] - 1)
+        out[c] = tab[ranks]
+    return [out]
+
+
 @impl("rel.Join")
 def _join(interp, ins, args):
     l, r = args

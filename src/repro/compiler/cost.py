@@ -90,6 +90,22 @@ class CostModel:
             nb = float(ins.param("num_buckets") or 1.0)
             return rows * bpr + 2.0 * nb * outs[0].bytes_per_row
 
+        if op == "vec.DictEncode":
+            # rank lookup per encoded key column: log2(card) searchsorted
+            # probes of 4-byte ranks, or one O(1) gather through the dense
+            # remap table — the cost the elided sort has to beat
+            total = 0.0
+            for mode, card in zip(ins.param("modes"), ins.param("cards")):
+                per = (max(math.log2(max(float(card), 2.0)), 1.0)
+                       if mode == "searchsorted" else 1.0)
+                total += rows * 4.0 * per
+            return total
+
+        if op == "vec.DictDecode":
+            # decode-late: one gather per surviving key column on the
+            # compacted output, never the full input
+            return outs[0].rows * 4.0 * len(tuple(ins.param("cols")))
+
         if op in ("vec.MergeJoinSorted", "rel.Join"):
             right = args[1] if len(args) > 1 else args[0]
             probe = rows * max(math.log2(max(right.rows, 2.0)), 1.0) * bpr

@@ -41,6 +41,7 @@ __all__ = [
     "register_target", "get_target", "available_targets",
     "CANONICALIZE", "PARALLELIZE", "LOWER_REL_TO_VEC", "FUSE", "LOWER_TO_MESH",
     "FUSE_CHOICE", "GROUPED_RECOMBINE", "GROUPBY_CHOICE", "JOIN_CHOICE",
+    "ENCODE_CHOICE",
 ]
 
 
@@ -210,7 +211,8 @@ def _lower_rel_to_vec_chosen(opts: CompileOptions,
                              chosen: Dict[str, str]) -> Sequence[Any]:
     return [LowerRelToVec(opts.catalog if opts.catalog is not None else Catalog(),
                           groupby=chosen.get("groupby", "sorted"),
-                          join=chosen.get("join", "sorted"))]
+                          join=chosen.get("join", "sorted"),
+                          encode=chosen.get("encode", "raw"))]
 
 
 #: the one lowering stage both physical-operator Choices parameterize: the
@@ -249,6 +251,23 @@ JOIN_CHOICE = Choice(
     default="sorted",
     available=lambda opts: (("sorted", "hash") if opts.stats() is not None
                             else ("sorted",)),
+)
+
+
+_ENCODE_TIER = Stage("encode-strategy", lambda opts: [])
+
+#: key-encoding tier for the direct physical operators: ``raw`` plans dense
+#: buckets only over raw catalog domain bounds, ``dict`` re-encodes sparse
+#: and string keys to dense dictionary ranks (vec.DictEncode/DictDecode) so
+#: GroupAggDirect/HashJoinDirect apply where raw domains are missing or
+#: over budget.  The variants are no-op Stages: the label is consumed by
+#: LOWER_REL_TO_VEC_STRATEGY (same pattern as the join tier).
+ENCODE_CHOICE = Choice(
+    name="encode",
+    variants=(("raw", _ENCODE_TIER), ("dict", _ENCODE_TIER)),
+    default="raw",
+    available=lambda opts: (("raw", "dict") if opts.stats() is not None
+                            else ("raw",)),
 )
 
 
@@ -374,7 +393,7 @@ register_target(Target(
     name="local",
     flavors=("vec", "cf", "rel", "df", "la", "tz"),
     lowering_path=(CANONICALIZE, PARALLELIZE, GROUPBY_CHOICE, JOIN_CHOICE,
-                   FUSE_CHOICE),
+                   ENCODE_CHOICE, FUSE_CHOICE),
     make_backend=_make_local,
     source_kind="vec",
 ))
@@ -383,7 +402,7 @@ register_target(Target(
     name="spmd",
     flavors=("vec", "cf", "rel", "la", "mesh"),
     lowering_path=(CANONICALIZE, PARALLELIZE, GROUPBY_CHOICE, JOIN_CHOICE,
-                   FUSE_CHOICE, LOWER_TO_MESH, GROUPED_RECOMBINE),
+                   ENCODE_CHOICE, FUSE_CHOICE, LOWER_TO_MESH, GROUPED_RECOMBINE),
     make_backend=_make_spmd,
     source_kind="vec",
     needs_mesh=True,
@@ -396,7 +415,7 @@ register_target(Target(
     name="multipod",
     flavors=("vec", "cf", "rel", "la", "mesh"),
     lowering_path=(CANONICALIZE, PARALLELIZE, GROUPBY_CHOICE, JOIN_CHOICE,
-                   FUSE_CHOICE, LOWER_TO_MESH, GROUPED_RECOMBINE),
+                   ENCODE_CHOICE, FUSE_CHOICE, LOWER_TO_MESH, GROUPED_RECOMBINE),
     make_backend=_make_spmd,
     source_kind="vec",
     needs_mesh=True,

@@ -12,7 +12,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Tuple
 
-from .types import Atom, TupleType, BOOL, F32, F64, I32, I64
+from .types import Atom, TupleType, BOOL, F32, F64, I32, I64, STR
 
 # numeric promotion lattice
 _RANK = {"bool": 0, "i8": 1, "i16": 2, "i32": 3, "date": 3, "str": 3, "id": 3,
@@ -164,6 +164,10 @@ def _as_expr(v: Any) -> Expr:
         return Const(v, I64 if abs(v) > 2**31 - 1 else I32)
     if isinstance(v, float):
         return Const(v, F64)
+    if isinstance(v, str):
+        # string literals stay raw here; the vec lowering remaps them into
+        # global-dictionary code space (interp compares them directly)
+        return Const(v, STR)
     raise TypeError(f"cannot lift {v!r} into an expression")
 
 

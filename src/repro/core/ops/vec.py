@@ -212,6 +212,53 @@ def _groupagg_direct(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequ
     return [Vec(TupleType(fields), int(params["max_groups"]))]
 
 
+@op("vec.DictEncode", elementwise=True)
+def _dictencode(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """DictEncode(cols, modes, tables, lows, cards)(Vec⟨T⟩) → Vec⟨T'⟩.
+
+    Re-encodes key columns to dense dictionary ranks ``[0, card)`` so the
+    sort-free direct tiers apply to sparse/wide key domains.  Per column:
+    ``mode`` is ``"remap"`` (O(1) gather through a span-sized rank table)
+    or ``"searchsorted"`` (log(card) binary search in the sorted value
+    table); out-of-dictionary values get the sentinel rank ``card`` —
+    outside every declared rank domain, so a direct probe can never alias a
+    real bucket.  Encoded columns become i32.
+    """
+    v = _vec(ins[0])
+    cols = tuple(params["cols"])
+    if not cols:
+        raise TypeError("DictEncode with no columns")
+    for name in ("modes", "tables", "lows", "cards"):
+        if len(tuple(params[name])) != len(cols):
+            raise TypeError(f"DictEncode: {name} must match cols")
+    for c in cols:
+        v.schema.field(c)  # raises on unknown column
+    enc = set(cols)
+    fields = tuple((n, I32 if n in enc else t) for n, t in v.schema.fields)
+    return [Vec(TupleType(fields), _cap(v))]
+
+
+@op("vec.DictDecode", elementwise=True)
+def _dictdecode(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """DictDecode(cols, tables, atoms)(Vec⟨T⟩) → Vec⟨T'⟩.
+
+    Gathers ranks back to raw values through the sorted value tables —
+    applied *decode-late*: only to surviving group/join key columns after
+    compaction, never to full inputs.  ``atoms`` restores each column's
+    pre-encoding atom.
+    """
+    v = _vec(ins[0])
+    cols = tuple(params["cols"])
+    atoms = tuple(params["atoms"])
+    if len(tuple(params["tables"])) != len(cols) or len(atoms) != len(cols):
+        raise TypeError("DictDecode: tables/atoms must match cols")
+    back = dict(zip(cols, atoms))
+    for c in cols:
+        v.schema.field(c)
+    fields = tuple((n, back.get(n, t)) for n, t in v.schema.fields)
+    return [Vec(TupleType(fields), _cap(v))]
+
+
 @op("vec.BuildHTable")
 def _buildhtable(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
     """BuildHTable()(Vec⟨T⟩) → Single⟨HTab⟨T⟩⟩ (keys = params['keys'])."""

@@ -220,6 +220,9 @@ class Context:
     def register(self, name: str, data: Mapping[str, np.ndarray],
                  schema: Optional[TupleType] = None) -> None:
         data = {k: np.asarray(v) for k, v in data.items()}
+        # object arrays of python strings (pandas-style) → native unicode
+        data = {k: v.astype(str) if v.dtype.kind == "O" else v
+                for k, v in data.items()}
         if schema is None:
             schema = TupleType(tuple((k, _infer_atom(v)) for k, v in data.items()))
         self.tables[name] = data
@@ -237,18 +240,35 @@ class Context:
         p = self.pad_to
         return max(p, ((n + p - 1) // p) * p)
 
+    def _has_strings(self) -> bool:
+        return any(np.asarray(v).dtype.kind in ("U", "S")
+                   for cols in self.tables.values() for v in cols.values())
+
     def statistics(self):
         """Exact table statistics from the registered columns (cached).
 
         These feed the driver's cost-based plan selection via
-        ``Catalog.stats`` → ``CompileOptions``.
+        ``Catalog.stats`` → ``CompileOptions``.  When any registered column
+        holds strings, a session-global string :class:`Dictionary` is built
+        over the union of all string values: physical string columns are
+        its i32 rank codes (globally consistent, so cross-table joins and
+        order-by compare correctly on codes), and per-column dictionaries
+        are expressed in that code space.
         """
         if self._stats is None:
-            from ..compiler.stats import Statistics, stats_from_columns
+            from ..compiler.stats import (Dictionary, Statistics,
+                                          stats_from_columns)
 
+            svals: set = set()
+            for cols in self.tables.values():
+                for v in cols.values():
+                    a = np.asarray(v)
+                    if a.dtype.kind in ("U", "S"):
+                        svals.update(str(x) for x in np.unique(a))
+            gd = Dictionary.make(sorted(svals)) if svals else None
             self._stats = Statistics.make(
-                {name: stats_from_columns(cols)
-                 for name, cols in self.tables.items()})
+                {name: stats_from_columns(cols, gd)
+                 for name, cols in self.tables.items()}, gd)
         return self._stats
 
     def catalog(self, with_stats: bool = True):
@@ -274,9 +294,12 @@ class Context:
             target=target,
             parallel=parallel,
             # statistics feed both the costed search and forced physical
-            # strategies (a forced groupby=direct needs key-domain bounds)
+            # strategies (a forced groupby=direct needs key-domain bounds);
+            # string tables always need them — the vec lowering remaps
+            # string-literal predicates through the global dictionary
             catalog=self.catalog(
-                with_stats=optimize is not None or strategy is not None),
+                with_stats=optimize is not None or strategy is not None
+                or self._has_strings()),
             use_kernels=use_kernels,
             fuse=fuse,
             backend=backend,
@@ -288,11 +311,30 @@ class Context:
             guard=guard,
         )
 
+    def _physical_columns(self, name: str) -> Dict[str, np.ndarray]:
+        """Columns in their physical dtypes: string columns become i32
+        global-dictionary rank codes (the documented str→i32 adaptation —
+        rank order is lexicographic order, so comparisons, sorts, and
+        joins on codes agree with the same operations on the strings)."""
+        data = self.tables[name]
+        if not any(np.asarray(v).dtype.kind in ("U", "S")
+                   for v in data.values()):
+            return data
+        gd = self.statistics().global_dict
+        gvals = np.asarray(gd.values)
+        out = {}
+        for k, v in data.items():
+            a = np.asarray(v)
+            out[k] = (np.searchsorted(gvals, a).astype(np.int32)
+                      if a.dtype.kind in ("U", "S") else a)
+        return out
+
     def sources(self) -> Dict[str, Any]:
         from ..relational.runtime import VecTable
 
         return {
-            name: VecTable.from_numpy(data, self.capacity(name))
+            name: VecTable.from_numpy(self._physical_columns(name),
+                                      self.capacity(name))
             for name, data in self.tables.items()
         }
 
@@ -309,12 +351,34 @@ class Context:
         src = (self.tables if get_target(target).source_kind == "numpy"
                else self.sources())
         (out,) = compiled(src)
-        return _to_numpy(out)
+        return self._decode_output(frame, _to_numpy(out))
+
+    def _decode_output(self, frame: Frame,
+                       out: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        """Decode i32 global-code columns back to strings at the session
+        boundary.  Schema-driven: a column the frame types as ``str`` whose
+        physical array is integral came out of the vec pipeline as codes;
+        the interp target returns the raw strings already (non-integer
+        dtype) and is left alone."""
+        if not self._has_strings():
+            return out
+        gd = self.statistics().global_dict
+        gvals = np.asarray(gd.values)
+        schema = frame.schema
+        names = set(schema.names)
+        for k, arr in list(out.items()):
+            if (k in names
+                    and getattr(schema.field(k), "domain", None) == "str"
+                    and np.issubdtype(np.asarray(arr).dtype, np.integer)):
+                out[k] = gvals[np.clip(np.asarray(arr), 0, len(gvals) - 1)]
+        return out
 
 
 def _infer_atom(v: np.ndarray) -> Atom:
-    from ..core.types import BOOL, F32, F64, I32, I64
+    from ..core.types import BOOL, F32, F64, I32, I64, STR
 
+    if v.dtype.kind in ("U", "S"):
+        return STR
     if v.dtype == np.bool_:
         return BOOL
     if v.dtype in (np.int8, np.int16, np.int32):

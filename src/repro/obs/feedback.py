@@ -47,6 +47,9 @@ TAPPED_OPS = frozenset({
     "vec.GroupAggDirect", "vec.FusedSelectAgg", "vec.AggrVec",
     "vec.MergeJoinSorted", "vec.HashJoinDirect", "vec.FusedJoinGroupAgg",
     "vec.Compact", "vec.TopKVec", "vec.LimitVec",
+    # encode cardinality: rows flowing through the rank lookup (the encode
+    # cost driver — dictionary card itself is a static instruction param)
+    "vec.DictEncode",
     # rel flavor (interpreter)
     "rel.Scan", "rel.Select", "rel.GroupByAggr", "rel.Aggr", "rel.Join",
     "rel.Limit", "rel.Distinct",

@@ -169,6 +169,50 @@ def compact(t: VecTable, max_count: Optional[int] = None) -> VecTable:
     return VecTable(cols, valid)
 
 
+def dict_encode(t: VecTable, cols: Sequence[str], modes: Sequence[str],
+                tables: Sequence, lows: Sequence[int],
+                cards: Sequence[int]) -> VecTable:
+    """Per-column value→rank encoding against static sorted dictionaries.
+
+    ``mode == "remap"``: one gather through a span-sized rank table whose
+    out-of-dictionary slots already hold the sentinel.  Otherwise a
+    searchsorted rank lookup.  Out-of-dictionary values (possible on join
+    probe sides) get the sentinel rank ``card`` — one past every declared
+    rank domain, so downstream direct tables treat them as out-of-domain
+    rather than aliasing a real bucket.
+    """
+    out = dict(t.cols)
+    for c, mode, table, lo, card in zip(cols, modes, tables, lows, cards):
+        arr = t.cols[c]
+        tab = jnp.asarray(table)
+        if mode == "remap":
+            span = tab.shape[0]
+            idx = arr.astype(jnp.int32) - jnp.int32(lo)
+            ok = (idx >= 0) & (idx < span)
+            ranks = tab[jnp.clip(idx, 0, span - 1)]
+            out[c] = jnp.where(ok, ranks, jnp.int32(card)).astype(jnp.int32)
+        else:
+            tab = tab.astype(arr.dtype)
+            i = jnp.searchsorted(tab, arr)
+            ic = jnp.clip(i, 0, card - 1)
+            out[c] = jnp.where(tab[ic] == arr, ic,
+                               jnp.int32(card)).astype(jnp.int32)
+    return VecTable(out, t.valid)
+
+
+def dict_decode(t: VecTable, cols: Sequence[str], tables: Sequence) -> VecTable:
+    """Gather ranks back to raw values through the sorted value tables.
+
+    Sentinel/invalid ranks clip to the last dictionary entry — such rows
+    are already masked out by validity."""
+    out = dict(t.cols)
+    for c, table in zip(cols, tables):
+        tab = jnp.asarray(table)
+        ranks = jnp.clip(t.cols[c].astype(jnp.int32), 0, tab.shape[0] - 1)
+        out[c] = tab[ranks]
+    return VecTable(out, t.valid)
+
+
 #: composite-key packings with more buckets than this raise instead of
 #: silently colliding in the 32-bit accumulator
 _PACK_LIMIT = 1 << 31

@@ -126,6 +126,19 @@ def _scratch_bytes(ins: Instruction) -> int:
         out = ins.outputs[0].type
         bpr = item_nbytes(out.item, 8) if is_coll(out) else 8
         return (nbj + 1) * 4 + nbg * bpr
+    if op in ("vec.DictEncode", "vec.DictDecode"):
+        # the static dictionary tables shipped with the instruction (remap
+        # rank tables / sorted value tables) plus the re-encoded key
+        # columns: one i32 per row per encoded column
+        table_bytes = 0
+        for t in (ins.param("tables") or ()):
+            size = getattr(t, "size", None)
+            itemsize = getattr(getattr(t, "dtype", None), "itemsize", 4)
+            table_bytes += int(size if size is not None else len(t)) * itemsize
+        n_cols = len(tuple(ins.param("cols") or ()))
+        t0 = ins.inputs[0].type if ins.inputs else None
+        rows = int(t0.attr("max_count") or 0) if t0 is not None and is_coll(t0) else 0
+        return table_bytes + n_cols * rows * 4
     if op == "vec.SortByKey":
         # permutation indices + a gathered copy of the block
         return sum(_reg_bytes(r) for r in ins.inputs)

@@ -12,6 +12,8 @@ strategy choice to its conservative variant, in order of how adventurous
 the adventurous variant is —
 
     as chosen
+      → encode=raw              (no dictionary rank tables; a crashing
+                                 encoded plan keeps its direct tier first)
       → groupby=sorted          (no dense-bucket allocation)
       → join=sorted              (no direct-table join scratch)
       → fuse=unfused            (no fused Pallas kernels)
@@ -36,6 +38,7 @@ __all__ = ["DegradedWarning", "SAFE_VARIANTS", "INTERP_RUNG",
 #: choice name → conservative variant, in ladder order: each successive
 #: rung of the fallback chain forces one more of these
 SAFE_VARIANTS: Tuple[Tuple[str, str], ...] = (
+    ("encode", "raw"),
     ("groupby", "sorted"),
     ("join", "sorted"),
     ("fuse", "unfused"),

@@ -150,10 +150,12 @@ class TestTargets:
         spmd = get_target("spmd")
         names = [s.name for s in spmd.lowering_path]
         assert names == ["canonicalize", "parallelize", "groupby", "join",
-                         "fuse", "lower-to-mesh", "grouped-recombine"]
+                         "encode", "fuse", "lower-to-mesh",
+                         "grouped-recombine"]
         assert "mesh" in spmd.flavors
         # the strategy points the cost-based optimizer may search over
-        assert [c.name for c in spmd.choices()] == ["groupby", "join", "fuse",
+        assert [c.name for c in spmd.choices()] == ["groupby", "join",
+                                                    "encode", "fuse",
                                                     "grouped-recombine"]
 
     def test_unknown_target_raises(self):

@@ -1,0 +1,414 @@
+"""Dictionary encoding: the O(n) sort-free tier on string and sparse keys.
+
+Covers the encode=raw|dict strategy choice end to end:
+  * string group-by keys run through every target (interp / local / spmd)
+    and agree with the interp oracle, both with ``encode=dict`` forced and
+    under the costed search;
+  * sparse integer keys whose raw span overflows ``MAX_DIRECT_BUCKETS``
+    get a ``vec.DictEncode`` → ``vec.GroupAggDirect`` → ``vec.DictDecode``
+    sandwich (decode-late: only surviving keys are decoded);
+  * string joins handle duplicate, empty-result, and out-of-dictionary
+    probe keys;
+  * ``lower_vec.direct_unavailable`` / ``hash_unavailable`` warnings name
+    *why* encoding was not applied (no stats vs dictionary over budget vs
+    strategy forced raw);
+  * packing dictionary ranks lifts the 32-bit composite-key ceiling for
+    sorted joins.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+import warnings
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.compiler import PlanCache, compile as cvm_compile
+from repro.core.expr import col
+from repro.core.passes.lower_vec import Catalog
+from repro.frontends.dataflow import Context, count_, sum_
+from repro.launch.hermetic import subprocess_env
+
+ROOT = Path(__file__).resolve().parents[1]
+
+CITIES = ["athens", "berlin", "cairo", "dakar", "edinburgh", "florence",
+          "geneva", "havana"]
+
+
+def make_city_ctx(n=2048, pad_to=256, seed=11):
+    rng = np.random.default_rng(seed)
+    ctx = Context(pad_to=pad_to)
+    ctx.register("sales", {
+        "city": np.array(CITIES, dtype=object)[rng.integers(0, len(CITIES), n)],
+        "amount": rng.gamma(2.0, 50.0, n).astype(np.float32),
+    })
+    return ctx
+
+
+def city_query(ctx, max_groups=16):
+    return (ctx.table("sales")
+            .group_by("city", max_groups=max_groups)
+            .agg(sum_("amount").as_("rev"), count_().as_("n"))
+            .order_by("city"))
+
+
+def assert_frames_equal(got, want):
+    assert set(got) == set(want)
+    for k in want:
+        g, w = np.asarray(got[k]).ravel(), np.asarray(want[k]).ravel()
+        assert g.shape == w.shape, (k, g.shape, w.shape)
+        if g.dtype.kind in ("U", "S", "O"):
+            np.testing.assert_array_equal(g.astype(str), w.astype(str))
+        elif g.dtype.kind == "f" or w.dtype.kind == "f":
+            np.testing.assert_allclose(g, w, rtol=1e-4)
+        else:
+            np.testing.assert_array_equal(g, w)
+
+
+# ---------------------------------------------------------------------------
+# string group-by keys, every target
+# ---------------------------------------------------------------------------
+
+
+class TestStringGroupBy:
+    def test_forced_dict_direct_matches_interp(self):
+        ctx = make_city_ctx()
+        q = city_query(ctx)
+        want = ctx.execute(q, target="interp")
+        assert np.asarray(want["city"]).dtype.kind in ("U", "S", "O")
+        got = ctx.execute(q, target="local",
+                          strategy={"groupby": "direct", "encode": "dict"})
+        # the boundary decode hands back real strings, not rank codes
+        assert np.asarray(got["city"]).dtype.kind in ("U", "S", "O")
+        assert_frames_equal(got, want)
+
+    def test_cost_search_picks_dict_direct_on_low_card_strings(self):
+        ctx = make_city_ctx()
+        q = city_query(ctx)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            res = ctx.compile(q, optimize="cost", cache=PlanCache())
+        chosen = dict(res.strategy)
+        assert chosen["encode"] == "dict"
+        assert chosen["groupby"] == "direct"
+        assert "vec.GroupAggDirect" in res.program.opcodes()
+        want = ctx.execute(q, target="interp")
+        got = ctx.execute(q, target="local", optimize="cost")
+        assert_frames_equal(got, want)
+
+    def test_string_predicate_remapped_to_code_space(self):
+        """String comparison literals are rewritten into global-code space
+        before lowering: eq, range, and absent-literal predicates all agree
+        with the interp oracle's raw-string comparison."""
+        ctx = make_city_ctx()
+        for pred in (col("city").eq("cairo"),
+                     col("city") >= "dakar",
+                     col("city") < "cairo",
+                     col("city").eq("zagreb")):      # not in any table
+            q = (ctx.table("sales").filter(pred)
+                 .group_by("city", max_groups=16)
+                 .agg(count_().as_("n")).order_by("city"))
+            want = ctx.execute(q, target="interp")
+            got = ctx.execute(q, target="local",
+                              strategy={"groupby": "direct", "encode": "dict"})
+            assert_frames_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# sparse integer keys: the DictEncode sandwich
+# ---------------------------------------------------------------------------
+
+
+def make_sparse_ctx(n=4096, ndv=300, pad_to=512, seed=23):
+    rng = np.random.default_rng(seed)
+    # ~1.5e9 raw span (int32-safe) but only `ndv` distinct values: far over
+    # MAX_DIRECT_BUCKETS raw, tiny as dictionary ranks
+    domain = rng.integers(0, 1_500_000_000, ndv).astype(np.int32)
+    ctx = Context(pad_to=pad_to)
+    ctx.register("t", {
+        "k": domain[rng.integers(0, ndv, n)],
+        "v": rng.normal(size=n).astype(np.float32),
+    })
+    return ctx
+
+
+def sparse_query(ctx, max_groups=512):
+    return (ctx.table("t").group_by("k", max_groups=max_groups)
+            .agg(sum_("v").as_("s"), count_().as_("n")).order_by("k"))
+
+
+class TestSparseIntKeys:
+    def test_dict_encode_sandwich_emitted(self):
+        ctx = make_sparse_ctx()
+        q = sparse_query(ctx)
+        res = ctx.compile(q, strategy={"groupby": "direct", "encode": "dict"},
+                          cache=PlanCache())
+        ops = res.program.opcodes()
+        assert "vec.DictEncode" in ops
+        assert "vec.GroupAggDirect" in ops
+        assert "vec.DictDecode" in ops
+        body = [i.opcode for i in res.program.body]
+        # decode-late: the decode sits after the aggregation, on the
+        # compacted groups, never on the full input
+        assert body.index("vec.DictDecode") > body.index("vec.GroupAggDirect")
+        want = ctx.execute(q, target="interp")
+        (out,) = res(ctx.sources())
+        from repro.frontends.dataflow import _to_numpy
+        assert_frames_equal(_to_numpy(out), want)
+
+    def test_forced_raw_warns_and_degrades_to_sorted(self):
+        ctx = make_sparse_ctx()
+        q = sparse_query(ctx)
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            res = ctx.compile(q, strategy={"groupby": "direct",
+                                           "encode": "raw"},
+                              cache=PlanCache())
+        ops = res.program.opcodes()
+        assert "vec.GroupAggDirect" not in ops
+        assert "vec.GroupAggSorted" in ops
+        msgs = [str(w.message) for w in caught
+                if "direct_unavailable" in str(w.message)]
+        assert msgs, "downgrade must be loud"
+        assert any("strategy forced encode=raw" in m for m in msgs)
+        got = ctx.execute(q, target="local",
+                          strategy={"groupby": "direct", "encode": "raw"})
+        assert_frames_equal(got, ctx.execute(q, target="interp"))
+
+    def test_cost_search_picks_dict_on_sparse_keys(self):
+        ctx = make_sparse_ctx()
+        q = sparse_query(ctx)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            res = ctx.compile(q, optimize="cost", cache=PlanCache())
+        assert dict(res.strategy)["encode"] == "dict"
+        assert "vec.GroupAggDirect" in res.program.opcodes()
+
+
+# ---------------------------------------------------------------------------
+# string joins: duplicates, empty results, out-of-dictionary probes
+# ---------------------------------------------------------------------------
+
+
+def make_join_ctx(n_probe=2048, n_build=64, pad_to=256, seed=5):
+    rng = np.random.default_rng(seed)
+    build_skus = np.array([f"sku-{i:04d}" for i in range(n_build)],
+                          dtype=object)
+    # probe draws from the build skus *plus* skus that exist nowhere in the
+    # build table (out-of-dictionary for the build side), with duplicates
+    extra = np.array([f"xsku-{i:04d}" for i in range(16)], dtype=object)
+    pool = np.concatenate([build_skus, extra])
+    ctx = Context(pad_to=pad_to)
+    ctx.register("orders", {
+        "sku": pool[rng.integers(0, len(pool), n_probe)],
+        "qty": rng.integers(1, 10, n_probe).astype(np.int32),
+    })
+    ctx.register("parts", {
+        "psku": build_skus,
+        "price": rng.gamma(2.0, 10.0, n_build).astype(np.float32),
+    })
+    return ctx
+
+
+class TestStringJoin:
+    def _join_query(self, ctx):
+        return (ctx.table("orders")
+                .join(ctx.table("parts"), left_on=("sku",),
+                      right_on=("psku",))
+                .group_by("sku", max_groups=128)
+                .agg(sum_("qty").as_("q"), count_().as_("n"))
+                .order_by("sku"))
+
+    @pytest.mark.parametrize("strategy", [
+        {"join": "hash", "encode": "dict"},
+        {"join": "sorted", "encode": "dict"},
+        None,  # costed
+    ])
+    def test_join_with_out_of_dictionary_probes(self, strategy):
+        ctx = make_join_ctx()
+        q = self._join_query(ctx)
+        want = ctx.execute(q, target="interp")
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            got = ctx.execute(
+                q, target="local", strategy=strategy,
+                optimize=None if strategy else "cost")
+        # the unmatched xsku-* probes must have been dropped, not aliased
+        assert not any(str(s).startswith("xsku") for s in got["sku"])
+        assert_frames_equal(got, want)
+
+    def test_empty_join_result(self):
+        rng = np.random.default_rng(2)
+        ctx = Context(pad_to=64)
+        ctx.register("l", {"k": np.array(["a", "b", "c", "d"] * 8,
+                                         dtype=object),
+                           "x": rng.normal(size=32).astype(np.float32)})
+        ctx.register("r", {"k2": np.array(["w", "y", "z"], dtype=object),
+                           "y": np.ones(3, np.float32)})
+        q = (ctx.table("l").join(ctx.table("r"), left_on=("k",),
+                                 right_on=("k2",))
+             .group_by("k", max_groups=8).agg(count_().as_("n")))
+        want = ctx.execute(q, target="interp")
+        got = ctx.execute(q, target="local",
+                          strategy={"join": "hash", "encode": "dict"})
+        assert len(np.asarray(got["n"]).ravel()) == 0
+        assert_frames_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# warning reasons: WHY was encoding not applied
+# ---------------------------------------------------------------------------
+
+
+class TestWarningReasons:
+    def _warn_msgs(self, caught, tag):
+        return [str(w.message) for w in caught if tag in str(w.message)]
+
+    def test_no_stats_reason(self):
+        ctx = make_sparse_ctx()
+        program = sparse_query(ctx).program()
+        bare = Catalog(capacities={"t": ctx.capacity("t")})  # no statistics
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            cvm_compile(program, target="local", catalog=bare,
+                        strategy={"groupby": "direct", "encode": "dict"},
+                        cache=PlanCache())
+        msgs = self._warn_msgs(caught, "direct_unavailable")
+        assert any("no catalog statistics" in m for m in msgs), msgs
+
+    def test_dictionary_over_budget_reason(self):
+        # two sparse key columns with ~2048 ranks each: the rank *product*
+        # (~4.2M) overflows MAX_DIRECT_BUCKETS even as dictionary ranks
+        rng = np.random.default_rng(9)
+        n, card = 4096, 2048
+        d1 = rng.integers(0, 1_000_000_000, card).astype(np.int32)
+        d2 = rng.integers(0, 1_000_000_000, card).astype(np.int32)
+        ctx = Context(pad_to=512)
+        ctx.register("t", {
+            "a": d1[rng.integers(0, card, n)],
+            "b": d2[rng.integers(0, card, n)],
+            "v": rng.normal(size=n).astype(np.float32),
+        })
+        q = (ctx.table("t").group_by("a", "b", max_groups=4096)
+             .agg(sum_("v").as_("s")))
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            ctx.compile(q, strategy={"groupby": "direct", "encode": "dict"},
+                        cache=PlanCache())
+        msgs = self._warn_msgs(caught, "direct_unavailable")
+        assert any("dictionary over budget" in m for m in msgs), msgs
+
+    def test_forced_raw_reason(self):
+        ctx = make_sparse_ctx()
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            ctx.compile(sparse_query(ctx),
+                        strategy={"groupby": "direct", "encode": "raw"},
+                        cache=PlanCache())
+        msgs = self._warn_msgs(caught, "direct_unavailable")
+        assert any("strategy forced encode=raw" in m for m in msgs), msgs
+
+
+# ---------------------------------------------------------------------------
+# the 32-bit composite packing ceiling, lifted by packing ranks
+# ---------------------------------------------------------------------------
+
+
+class TestPackingCeilingLift:
+    def test_sorted_composite_join_packs_ranks(self):
+        rng = np.random.default_rng(17)
+        n, card = 2048, 64
+        # each column spans ~4.2M raw: the raw product (~1.8e13) is far
+        # over the 2^31 packing ceiling; the rank product is 64×64 = 4096
+        d1 = (rng.permutation(200_000)[:card] * 21_001).astype(np.int32)
+        d2 = (rng.permutation(200_000)[:card] * 21_017).astype(np.int32)
+        idx = rng.integers(0, card, n)
+        ctx = Context(pad_to=256)
+        ctx.register("l", {
+            "a": d1[idx], "b": d2[idx],
+            "x": rng.normal(size=n).astype(np.float32),
+        })
+        pairs = rng.permutation(card)
+        ctx.register("r", {
+            "a2": d1[pairs], "b2": d2[pairs],
+            "y": rng.normal(size=card).astype(np.float32),
+        })
+        q = (ctx.table("l")
+             .join(ctx.table("r"), left_on=("a", "b"),
+                   right_on=("a2", "b2"))
+             .group_by("a", max_groups=128)
+             .agg(sum_("y").as_("sy"), count_().as_("n")).order_by("a"))
+        res = ctx.compile(q, strategy={"join": "sorted", "encode": "dict"},
+                          cache=PlanCache())
+        merge = next(i for i in res.program.body
+                     if i.opcode == "vec.MergeJoinSorted")
+        domains = merge.param("key_domains")
+        assert domains is not None
+        nb = 1
+        for lo, hi in domains:
+            nb *= int(hi) - int(lo) + 1
+        assert nb <= card * card  # rank space, not the raw span product
+        want = ctx.execute(q, target="interp")
+        got = ctx.execute(q, target="local",
+                          strategy={"join": "sorted", "encode": "dict"})
+        assert_frames_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# spmd: string keys through the mesh target (own device fleet, subprocess)
+# ---------------------------------------------------------------------------
+
+SPMD_DICT_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import warnings
+    import numpy as np
+
+    from tests.test_dict_encoding import make_city_ctx, city_query
+
+    ctx = make_city_ctx(n=2048, pad_to=256)
+    q = city_query(ctx)
+    want = ctx.execute(q, target="interp")
+    out = {"want": {k: np.asarray(v).tolist() for k, v in want.items()}}
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        forced = ctx.execute(q, target="spmd", parallel=8,
+                             strategy={"groupby": "direct",
+                                       "encode": "dict"})
+        costed = ctx.execute(q, target="spmd", parallel=8, optimize="cost")
+    out["forced"] = {k: np.asarray(v).tolist() for k, v in forced.items()}
+    out["costed"] = {k: np.asarray(v).tolist() for k, v in costed.items()}
+    print("RESULTS" + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def spmd_dict_results():
+    proc = subprocess.run(
+        [sys.executable, "-c", SPMD_DICT_SCRIPT],
+        capture_output=True, text=True, timeout=900,
+        env=subprocess_env(ROOT, extra_pythonpath=[str(ROOT)]),
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULTS")][0]
+    return json.loads(line[len("RESULTS"):])
+
+
+class TestSpmdStringKeys:
+    def test_forced_dict_matches_interp(self, spmd_dict_results):
+        want = spmd_dict_results["want"]
+        got = spmd_dict_results["forced"]
+        assert got["city"] == want["city"]  # decoded strings, ordered
+        np.testing.assert_allclose(got["rev"], want["rev"], rtol=1e-4)
+        np.testing.assert_array_equal(got["n"], want["n"])
+
+    def test_costed_matches_interp(self, spmd_dict_results):
+        want = spmd_dict_results["want"]
+        got = spmd_dict_results["costed"]
+        assert got["city"] == want["city"]
+        np.testing.assert_allclose(got["rev"], want["rev"], rtol=1e-4)
+        np.testing.assert_array_equal(got["n"], want["n"])

@@ -239,9 +239,11 @@ class TestStrategyChoice:
         assert any("join=sorted" in l for l in labels)
 
     def test_cost_huge_domain_selects_sorted(self):
-        """Join keys spread over a ~2^21 domain: the direct table would not
-        fit the bucket cap, the hash tier is unavailable (with a warning),
-        and the cost tie-break lands on sorted."""
+        """Join keys spread over a ~2^21 *raw* domain but only 2048 distinct
+        values: the raw direct table would not fit the bucket cap (forcing
+        encode=raw warns and degrades to sorted), while dictionary encoding
+        shrinks the domain to rank space and the costed search keeps the
+        O(n) hash tier."""
         rng = np.random.default_rng(13)
         n, m = 4096, 2048
         ctx = Context(pad_to=512)
@@ -255,13 +257,24 @@ class TestStrategyChoice:
         })
         q = ctx.table("probe").join(ctx.table("build"),
                                     left_on=("k",), right_on=("bk",))
+        # encode=raw forced: the sparse raw span is over budget → warn and
+        # degrade the join to the sorted tier, exactly the pre-dictionary
+        # behaviour
         with warnings.catch_warnings(record=True) as caught:
             warnings.simplefilter("always")
-            res = ctx.compile(q, optimize="cost", cache=PlanCache())
-        assert dict(res.strategy)["join"] == "sorted"
-        assert "vec.MergeJoinSorted" in res.program.opcodes()
-        assert "vec.HashJoinDirect" not in res.program.opcodes()
+            raw = ctx.compile(q, strategy={"join": "hash", "encode": "raw"},
+                              cache=PlanCache())
+        assert "vec.HashJoinDirect" not in raw.program.opcodes()
+        assert "vec.MergeJoinSorted" in raw.program.opcodes()
         assert any("hash_unavailable" in str(w.message) for w in caught)
+        # costed search: dictionary ranks fit the cap, so the sort-free
+        # tier stays available and wins
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            res = ctx.compile(q, optimize="cost", cache=PlanCache())
+        chosen = dict(res.strategy)
+        assert chosen["join"] == "hash" and chosen["encode"] == "dict"
+        assert "vec.HashJoinDirect" in res.program.opcodes()
 
     def test_pkfk_unverified_warns(self):
         """Duplicate build-side keys break the PK-FK assumption the vec

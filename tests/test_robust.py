@@ -680,3 +680,82 @@ def test_spmd_shard_fault_recovers_to_oracle():
     assert got["ok"], got
     assert got["degraded"], got
     assert got["warned"] >= 1, got
+
+
+# ---------------------------------------------------------------------------
+# the encode=raw rung: a crashing dict-encoded plan keeps its direct tier
+# ---------------------------------------------------------------------------
+
+
+class TestEncodeRawRung:
+    def _sparse_ctx(self):
+        rng = np.random.default_rng(23)
+        n, ndv = 2048, 200
+        domain = rng.integers(0, 1_400_000_000, ndv).astype(np.int32)
+        ctx = Context(pad_to=256)
+        ctx.register("t", {
+            "k": domain[rng.integers(0, ndv, n)],
+            "v": rng.normal(size=n).astype(np.float32),
+        })
+        return ctx
+
+    def _query(self, ctx):
+        return (ctx.table("t").group_by("k", max_groups=256)
+                .agg(sum_("v").as_("s"), count_().as_("n")))
+
+    def test_ladder_tries_encode_raw_first(self):
+        chosen = {"groupby": "direct", "encode": "dict"}
+        rungs = [r for r, _ in fallback_ladder(chosen)]
+        assert rungs == ["encode=raw", "groupby=sorted", "interp"]
+        # the first rung drops only the dictionary, not the direct tier
+        first = dict(fallback_ladder(chosen).__next__()[1])
+        assert first == {"groupby": "direct", "encode": "raw"}
+
+    def test_crashed_dict_plan_degrades_through_encode_raw(self):
+        ctx = self._sparse_ctx()
+        q = self._query(ctx)
+        oracle = ctx.execute(q, target="interp")
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            with inject("backend.execute", times=1, seed=CHAOS_SEED):
+                result = ctx.compile(
+                    q, target="local", cache=PlanCache(),
+                    strategy={"groupby": "direct", "encode": "dict"})
+                got = run_compiled(ctx, result)
+        assert result.degraded and result.degraded[0] == "encode=raw"
+        assert [w for w in caught if issubclass(w.category, DegradedWarning)]
+        order_g = np.argsort(np.asarray(got["k"]).ravel())
+        order_w = np.argsort(np.asarray(oracle["k"]).ravel())
+        for col_name in oracle:
+            np.testing.assert_allclose(
+                np.asarray(got[col_name]).ravel()[order_g],
+                np.asarray(oracle[col_name]).ravel()[order_w], rtol=1e-4)
+
+    def test_poisoned_dict_strategy_not_replayed(self, tmp_path):
+        """A crashed dict-encoded plan is poisoned in the store: a fresh
+        process (fresh cache, same store) skips it up front instead of
+        re-crashing through the same strategy."""
+        ctx = self._sparse_ctx()
+        q = self._query(ctx)
+        store = PlanStore(tmp_path)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            with inject("backend.execute", times=1, seed=CHAOS_SEED):
+                first = ctx.compile(
+                    q, target="local", cache=PlanCache(), store=store,
+                    strategy={"groupby": "direct", "encode": "dict"})
+                run_compiled(ctx, first)
+        assert first.degraded
+        records = [p for p in tmp_path.glob("*.json")
+                   if p.name != "calibration.json"]
+        poisons = [json.loads(p.read_text()).get("poison") or []
+                   for p in records]
+        assert any(poisons), "crashed dict strategy must be poisoned"
+        with tracing() as tr:
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                second = ctx.compile(
+                    q, target="local", cache=PlanCache(), store=store,
+                    strategy={"groupby": "direct", "encode": "dict"})
+                run_compiled(ctx, second)
+        assert tr.counters.get("robust.fallback.poison_skip", 0) >= 1

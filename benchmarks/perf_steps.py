@@ -34,7 +34,11 @@ the fused select→join→group pipeline vs its unfused plan with a
 streaming-bandwidth roofline check; --dict-bench runs the BENCH_9.json
 dictionary-encoding benchmark: string and sparse-integer group-by/join
 keys through the dict-encoded direct tiers vs the sorted tiers, the
-costed encode=raw|dict decisions, and oracle checks in both directions.)
+costed encode=raw|dict decisions, and oracle checks in both directions;
+--stream-bench runs the BENCH_10.json streaming benchmark: sustained
+micro-batch fold throughput, the checkpointed-vs-bare snapshot overhead
+ratio with its <1.10 guard, and the recovery-time-to-caught-up after an
+injected mid-batch kill with an exactly-once oracle check.)
 """
 
 import json
@@ -607,6 +611,138 @@ def dict_bench_report(reps: int = 15):
             and oracle_ok)
 
 
+def _stream_cell():
+    """The streaming cell for BENCH_10: a Q1-shaped filtered group-by over
+    2^18 rows delivered as 8192-row micro-batches."""
+    import numpy as np
+    from repro.core.expr import col
+    from repro.frontends.dataflow import Context, count_, sum_
+
+    rng = np.random.default_rng(13)
+    n = 1 << 18
+    ctx = Context(pad_to=1024)
+    ctx.register("sales", {
+        "region": rng.integers(0, 8, n).astype(np.int32),
+        "amount": rng.gamma(2.0, 50.0, n).astype(np.float32),
+        "year": rng.integers(2018, 2026, n).astype(np.int32),
+    })
+    q = (ctx.table("sales").filter(col("year") >= 2020)
+         .group_by("region", max_groups=8)
+         .agg(sum_("amount").as_("rev"), count_().as_("n")))
+    return ctx, n, q
+
+
+def stream_bench_report(reps: int = 7):
+    """Streaming-target trajectory → BENCH_10.json.
+
+    Three numbers the streaming story stands on:
+
+    * **sustained throughput** — rows/s folding the stream as sequenced
+      micro-batches through :class:`StreamConsumer` (best-of-N, fold chain
+      synced before the clock stops);
+    * **snapshot overhead** — the same fold with a durable
+      ``CheckpointManager`` snapshot every ``snapshot_every`` batches vs
+      no checkpointing at all; the ratio must stay **< 1.10** (durability
+      may not tax steady-state throughput more than 10%);
+    * **recovery time to caught-up** — a ``stream.batch`` kill mid-stream,
+      then the measured wall from failure to the consumer having restored
+      and replayed the uncommitted suffix (``stream.recovery_s``), plus an
+      exactly-once oracle check of the final answer.
+    """
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import shutil
+    import tempfile
+
+    import numpy as np
+    import jax
+    from repro.compiler import PlanCache
+    from repro.distributed.checkpoint import CheckpointManager
+    from repro.frontends.dataflow import _to_numpy
+    from repro.launch.serve import StreamConsumer, microbatches, stream_loop
+    from repro.obs import tracing
+    from repro.robust.inject import inject
+
+    batch_rows, snapshot_every = 8192, 16
+    ctx, n, q = _stream_cell()
+    res = ctx.compile(q, target="stream", stream_table="sales",
+                      batch_rows=batch_rows, cache=PlanCache())
+    batches = microbatches(ctx.tables["sales"], batch_rows)
+    sources = ctx.sources()
+
+    def fold_wall(ckpt_dir=None):
+        c = StreamConsumer(
+            res, sources,
+            checkpoint=(CheckpointManager(ckpt_dir, n_shards=1, keep=2)
+                        if ckpt_dir else None),
+            snapshot_every=snapshot_every)
+        t0 = time.perf_counter()
+        for mb in batches:
+            c.process(mb)
+        c.snapshot()
+        jax.block_until_ready(c.results())  # the fold chain is async
+        return time.perf_counter() - t0, c
+
+    fold_wall()  # warm the jitted segments
+    fold_wall()
+    base_s = min(fold_wall()[0] for _ in range(reps))
+    ckpt_walls = []
+    snapshots = 0
+    for _ in range(reps):
+        d = tempfile.mkdtemp(prefix="stream_bench_ckpt_")
+        try:
+            wall, c = fold_wall(d)
+            ckpt_walls.append(wall)
+            snapshots = c.stats.snapshots
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+    ckpt_s = min(ckpt_walls)
+
+    # recovery: kill the first fold, measure failure → caught-up
+    d = tempfile.mkdtemp(prefix="stream_bench_recover_")
+    try:
+        c = StreamConsumer(res, sources,
+                           checkpoint=CheckpointManager(d, n_shards=1,
+                                                        keep=2),
+                           snapshot_every=snapshot_every)
+        with tracing() as tr:
+            with inject("stream.batch", rate=1.0, times=1, seed=0):
+                out = stream_loop(batches, c, max_recoveries=3)
+        recovery_s = tr.histograms["stream.recovery_s"][0]
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    want = ctx.execute(q, target="interp")
+    got = _to_numpy(out[0])
+    ow = np.argsort(np.asarray(want["region"]).ravel())
+    og = np.argsort(np.asarray(got["region"]).ravel())
+    oracle_ok = all(
+        bool(np.allclose(np.asarray(got[k]).ravel()[og],
+                         np.asarray(want[k]).ravel()[ow], rtol=1e-4))
+        for k in want)
+
+    record = {
+        "bench": "stream", "reps": reps, "rows": n,
+        "batch_rows": batch_rows, "n_batches": len(batches),
+        "snapshot_every": snapshot_every, "snapshots": snapshots,
+        "base_wall_s": base_s, "checkpointed_wall_s": ckpt_s,
+        "snapshot_overhead_ratio": ckpt_s / base_s,
+        "snapshot_overhead_guard": "<1.10",
+        "throughput_rows_per_s": n / base_s,
+        "batch_fold_ms": base_s / len(batches) * 1e3,
+        "recovery_s": recovery_s,
+        "recovery_restores": c.stats.restores,
+        "recovery_replayed": c.stats.replayed,
+        "oracle_ok_recovered": oracle_ok,
+    }
+    (ROOT / "BENCH_10.json").write_text(json.dumps(record, indent=2))
+    print(f"[perf] stream: {n} rows in {len(batches)}x{batch_rows} batches, "
+          f"{record['throughput_rows_per_s'] / 1e6:.2f} Mrows/s, snapshot "
+          f"overhead {record['snapshot_overhead_ratio']:.3f}x, recovery "
+          f"{recovery_s * 1e3:.1f} ms, oracle_ok={oracle_ok}", flush=True)
+    print(f"[perf] wrote {ROOT / 'BENCH_10.json'}")
+    return (record["snapshot_overhead_ratio"] < 1.10
+            and recovery_s < 60.0 and oracle_ok)
+
+
 def trace_report(reps: int = 30):
     """Traced executions → Chrome traces + BENCH_6.json.
 
@@ -784,6 +920,10 @@ def main():
         return
     if "--dict-bench" in sys.argv:
         if not dict_bench_report():
+            sys.exit(1)
+        return
+    if "--stream-bench" in sys.argv:
+        if not stream_bench_report():
             sys.exit(1)
         return
     compile_pass_report()

@@ -37,6 +37,7 @@ from .targets import (Choice, CompileOptions, StrategyStage, get_target,
 __all__ = [
     "compile", "run_passes", "program_size",
     "CompileResult", "PassRecord", "PlanCache", "PLAN_CACHE",
+    "enable_auto_replan", "disable_auto_replan",
 ]
 
 
@@ -147,6 +148,12 @@ class CompileResult:
     #: Disarmed after the first successful call — the steady-state hot path
     #: pays one attribute check.
     _guard: Optional[Any] = None
+    #: adaptive re-plan closure armed by the driver: when auto-replan is
+    #: enabled (:func:`enable_auto_replan`) and a traced execution's worst
+    #: cardinality miss puts this plan over the threshold, the closure
+    #: recompiles under the feedback catalog's observed statistics and
+    #: splices the new plan in (one-shot per arming)
+    _replan: Optional[Any] = None
 
     def __call__(self, sources: Any = None, *args: Any) -> Any:
         guard = self._guard
@@ -189,6 +196,12 @@ class CompileResult:
                     rel_miss=o.rel_miss, table=o.table)
         self.profile = profile
         fb.FEEDBACK.record(profile)
+        thresh = _AUTO_REPLAN[0]
+        if (thresh is not None and self._replan is not None
+                and any(f == self.fingerprint for f, _ in
+                        fb.FEEDBACK.plans_over_threshold(thresh))):
+            replan, self._replan = self._replan, None
+            replan(self, profile)
         return outs
 
     @property
@@ -327,6 +340,80 @@ PLAN_CACHE = PlanCache()
 
 
 # ---------------------------------------------------------------------------
+# adaptive re-planning (the ROADMAP auto-replan hook)
+# ---------------------------------------------------------------------------
+
+
+#: the armed auto-replan threshold (relative worst cardinality miss);
+#: ``None`` → off.  A one-element list so closures see updates.
+_AUTO_REPLAN: List[Optional[float]] = [None]
+
+
+def enable_auto_replan(threshold: float = 1.0) -> None:
+    """Arm adaptive re-planning for traced executions.
+
+    After each traced run the driver asks the feedback catalog whether the
+    plan's worst cardinality miss exceeds ``threshold``
+    (``FEEDBACK.plans_over_threshold``); if so, it recompiles the program
+    under ``Statistics.with_observed_rows`` (the measured base-table
+    cardinalities) and swaps the cached plan — the manual replan recipe
+    from the observability docs, made automatic.  Streaming consumers lean
+    on this: per-micro-batch cardinality drift is their common case.
+    """
+    _AUTO_REPLAN[0] = float(threshold)
+
+
+def disable_auto_replan() -> None:
+    _AUTO_REPLAN[0] = None
+
+
+def _make_replan(program: Program, tgt: Any, opts: CompileOptions,
+                 check: bool, fp: str, plan_cache: Optional[PlanCache],
+                 key: Tuple):
+    """The re-plan closure armed on cached CompileResults (see
+    :func:`enable_auto_replan`); mirrors the exec guard's splice-and-store
+    so the caller's handle and the cache both serve the corrected plan."""
+
+    def replan(result: CompileResult, profile: Any) -> None:
+        from ..core.passes.lower_vec import Catalog
+        from ..obs import feedback as fb
+
+        tracer = get_tracer()
+        observed = fb.FEEDBACK.observed_statistics(opts.stats())
+        cat = opts.catalog
+        new_cat = (replace(cat, stats=observed) if cat is not None
+                   else Catalog(stats=observed))
+        opts2 = replace(opts, catalog=new_cat, strategy=None,
+                        optimize="cost" if tgt.choices() else opts.optimize)
+        try:
+            nxt = _build_plan(program, tgt, opts2, check, None, fp, None,
+                              frozenset(), None, None, {})
+        except Exception as e:
+            from ..obs.trace import warn_event
+            tracer.counter("driver.replan.failed")
+            warn_event("replan.failed", program=program.name,
+                       target=tgt.name, error=f"{type(e).__name__}: {e}")
+            return
+        tracer.counter("driver.replan")
+        tracer.event("driver.replan", program=program.name, target=tgt.name,
+                     worst_miss=profile.worst_miss,
+                     old_strategy=dict(result.strategy),
+                     new_strategy=dict(nxt.strategy))
+        result.target = nxt.target
+        result.program = nxt.program
+        result.executable = nxt.executable
+        result.strategy = nxt.strategy
+        result.decision = nxt.decision
+        result.stats = nxt.stats
+        if plan_cache is not None:
+            plan_cache.store(key, replace(result, cache_hit=False,
+                                          cache_source="miss",
+                                          _guard=None, _replan=None))
+
+    return replan
+
+
+# ---------------------------------------------------------------------------
 # the entry point
 # ---------------------------------------------------------------------------
 
@@ -452,7 +539,9 @@ def compile(program: Program, target: str = "local", *,
             backend: Any = None,
             check: bool = True,
             memory_budget: Optional[int] = None,
-            guard: bool = True) -> CompileResult:
+            guard: bool = True,
+            stream_table: Optional[str] = None,
+            batch_rows: Optional[int] = None) -> CompileResult:
     """Compile a frontend CVM program for a registered target.
 
     ``cache``: ``None``/``True`` → the process-wide :data:`PLAN_CACHE`;
@@ -477,6 +566,11 @@ def compile(program: Program, target: str = "local", *,
     finally the interp target, emitting a ``DegradedWarning`` instead of
     failing the query (see docs/robustness.md).  Invalid *inputs* — unknown
     targets, malformed strategies, impossible meshes — still raise.
+
+    ``stream_table``/``batch_rows`` are for streaming targets
+    (``target="stream"``): the named table is delivered as micro-batches
+    of ``batch_rows`` rows and the executable folds them incrementally
+    (see docs/streaming.md).
     """
     tracer = get_tracer()
     if not tracer.enabled:
@@ -486,7 +580,7 @@ def compile(program: Program, target: str = "local", *,
             collectives=collectives, parallelize_targets=parallelize_targets,
             optimize=optimize, strategy=strategy, cache=cache, store=store,
             backend=backend, check=check, memory_budget=memory_budget,
-            guard=guard)
+            guard=guard, stream_table=stream_table, batch_rows=batch_rows)
     with tracer.span(f"compile:{program.name}", cat="compile",
                      target=target) as sp:
         result = _compile_impl(
@@ -495,7 +589,7 @@ def compile(program: Program, target: str = "local", *,
             collectives=collectives, parallelize_targets=parallelize_targets,
             optimize=optimize, strategy=strategy, cache=cache, store=store,
             backend=backend, check=check, memory_budget=memory_budget,
-            guard=guard)
+            guard=guard, stream_table=stream_table, batch_rows=batch_rows)
         sp.set(cache="hit" if result.cache_hit else "miss",
                source=result.cache_source,
                fingerprint=result.fingerprint[:12])
@@ -526,12 +620,26 @@ def _compile_impl(program: Program, target: str = "local", *,
                   backend: Any = None,
                   check: bool = True,
                   memory_budget: Optional[int] = None,
-                  guard: bool = True) -> CompileResult:
+                  guard: bool = True,
+                  stream_table: Optional[str] = None,
+                  batch_rows: Optional[int] = None) -> CompileResult:
     if optimize not in (None, "cost"):
         raise ValueError(f"unknown optimize mode {optimize!r}; "
                          "expected None or 'cost'")
     tgt = get_target(target)
     strat = _normalize_strategy(strategy, tgt)
+    if getattr(tgt, "streaming", False):
+        if not stream_table:
+            raise ValueError(
+                f"target {tgt.name!r} is streaming: pass stream_table=... "
+                "(the table delivered as micro-batches)")
+        batch_rows = int(batch_rows or 256)  # normalized → stable cache key
+        if batch_rows <= 0:
+            raise ValueError(f"batch_rows must be positive, got {batch_rows}")
+    elif stream_table is not None or batch_rows is not None:
+        raise ValueError(
+            f"stream_table/batch_rows only apply to streaming targets; "
+            f"{tgt.name!r} is not one")
     opts = CompileOptions(
         parallel=parallel, use_kernels=use_kernels, fuse=fuse, axis=axis,
         jit=jit, collectives=collectives, catalog=catalog, mesh=mesh,
@@ -539,6 +647,7 @@ def _compile_impl(program: Program, target: str = "local", *,
                              if parallelize_targets else None),
         optimize=optimize, strategy=strat,
         memory_budget=memory_budget,
+        stream_table=stream_table, batch_rows=batch_rows,
     )
     _check_parallel_divides(program, opts)
     _check_mesh_available(tgt, opts)
@@ -582,6 +691,10 @@ def _compile_impl(program: Program, target: str = "local", *,
     if guard:
         result._guard = _make_exec_guard(
             program, tgt, opts, check, backend, fp, plan_store, store_key,
+            plan_cache if use_cache else None, key)
+    if backend is None:
+        result._replan = _make_replan(
+            program, tgt, opts, check, fp,
             plan_cache if use_cache else None, key)
     return result
 

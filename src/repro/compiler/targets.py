@@ -73,6 +73,12 @@ class CompileOptions:
     #: set (see ``repro.robust.admission``); None → the
     #: ``REPRO_MEM_BUDGET_BYTES`` environment default (off when unset)
     memory_budget: Optional[int] = None
+    #: streaming target only: the source table delivered as micro-batches
+    stream_table: Optional[str] = None
+    #: streaming target only: micro-batch capacity (rows per batch); the
+    #: stream table is lowered at this capacity, so per-batch cost is
+    #: O(batch), not O(full table)
+    batch_rows: Optional[int] = None
 
     def stats(self):
         return self.catalog.stats if self.catalog is not None else None
@@ -100,7 +106,7 @@ class CompileOptions:
         return (self.parallel, self.use_kernels, self.fuse, self.axis,
                 self.jit, self.collectives, self.parallelize_targets,
                 cat, mesh_key, self.optimize, self.strategy,
-                self.memory_budget)
+                self.memory_budget, self.stream_table, self.batch_rows)
 
 
 # ---------------------------------------------------------------------------
@@ -147,8 +153,29 @@ def _parallelize(opts: CompileOptions) -> Sequence[Any]:
     return []
 
 
+def _effective_catalog(opts: CompileOptions) -> Catalog:
+    """The catalog the vec lowering sees.
+
+    For streaming compiles the stream table's capacity (and its observed
+    row count, when statistics are present) is rebound to the micro-batch
+    capacity: the per-batch segment of the split plan must size its
+    intermediates — and be costed — at O(batch), not O(full table)."""
+    from dataclasses import replace as _replace
+
+    cat = opts.catalog if opts.catalog is not None else Catalog()
+    if opts.stream_table is None:
+        return cat
+    rows = int(opts.batch_rows or 256)
+    caps = dict(cat.capacities)
+    caps[opts.stream_table] = rows
+    stats = cat.stats
+    if stats is not None:
+        stats = stats.with_observed_rows({opts.stream_table: rows})
+    return _replace(cat, capacities=caps, stats=stats)
+
+
 def _lower_rel_to_vec(opts: CompileOptions) -> Sequence[Any]:
-    return [LowerRelToVec(opts.catalog if opts.catalog is not None else Catalog())]
+    return [LowerRelToVec(_effective_catalog(opts))]
 
 
 def _fuse(opts: CompileOptions) -> Sequence[Any]:
@@ -209,7 +236,7 @@ class Choice:
 
 def _lower_rel_to_vec_chosen(opts: CompileOptions,
                              chosen: Dict[str, str]) -> Sequence[Any]:
-    return [LowerRelToVec(opts.catalog if opts.catalog is not None else Catalog(),
+    return [LowerRelToVec(_effective_catalog(opts),
                           groupby=chosen.get("groupby", "sorted"),
                           join=chosen.get("join", "sorted"),
                           encode=chosen.get("encode", "raw"))]
@@ -317,6 +344,9 @@ class Target:
     make_backend: Callable[[CompileOptions], Any]
     source_kind: str = "vec"  # "vec" (VecTable sources) | "numpy" (raw columns)
     needs_mesh: bool = False
+    #: the backend executes micro-batched incremental plans: compiles
+    #: require ``stream_table=`` and lower the stream scan at batch capacity
+    streaming: bool = False
 
     def choices(self) -> Tuple[Choice, ...]:
         return tuple(s for s in self.lowering_path if isinstance(s, Choice))
@@ -397,6 +427,28 @@ register_target(Target(
     make_backend=_make_local,
     source_kind="vec",
 ))
+
+def _make_stream(opts: CompileOptions) -> Any:
+    from ..backends.stream import StreamBackend
+    return StreamBackend(opts)
+
+
+# The streaming target shares the local lowering path (same physical-tier
+# Choices — the carried state *is* a GroupAggDirect/GroupAggSorted
+# accumulator), then StreamBackend splits the lowered program into
+# static / per-batch / merge / finalize segments (core/passes/lower_stream)
+# for checkpointed incremental execution.  No Parallelize stage: the
+# micro-batch is the unit of work.
+register_target(Target(
+    name="stream",
+    flavors=("vec", "cf", "rel", "df", "la", "tz"),
+    lowering_path=(CANONICALIZE, GROUPBY_CHOICE, JOIN_CHOICE,
+                   ENCODE_CHOICE, FUSE_CHOICE),
+    make_backend=_make_stream,
+    source_kind="vec",
+    streaming=True,
+))
+
 
 register_target(Target(
     name="spmd",

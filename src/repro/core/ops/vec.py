@@ -396,3 +396,62 @@ def _histpart(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[It
     n = int(params["n"])
     cap = int(params.get("per_cap") or _cap(v))
     return [split_type(Vec(v.item, cap), n)]
+
+
+# ---------------------------------------------------------------------------
+# streaming state (micro-batched incremental execution)
+# ---------------------------------------------------------------------------
+
+
+@op("vec.MergeGroupedState", aggregation={"kind": "grouped"})
+def _merge_grouped_state(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """MergeGroupedState(keys, aggs, max_groups[, key_domains, num_buckets])
+    (Vec⟨keys+aggs⟩, Vec⟨keys+aggs⟩) → Vec⟨keys+aggs⟩.
+
+    The streaming merge op: fold a micro-batch's grouped *partial*
+    aggregate (delta) into the running state.  Both operands and the result
+    share one schema and capacity ``max_groups`` — the op is the carried
+    accumulator of the streaming target's step function.  ``aggs`` are the
+    ORIGINAL AggSpecs; the backend combines each partial column with its
+    ``combine_fn`` (sum-of-sums, sum-of-counts, min-of-mins).  With
+    ``key_domains``/``num_buckets`` the merge runs on the sort-free dense
+    buckets (the GroupAggDirect accumulator carried across batches).
+    """
+    state, delta = _vec(ins[0]), _vec(ins[1])
+    if state.item != delta.item:
+        raise TypeError(
+            f"MergeGroupedState: state schema {state.render()} != delta "
+            f"schema {delta.render()}")
+    keys: Tuple[str, ...] = tuple(params["keys"])
+    aggs: Tuple[AggSpec, ...] = tuple(params["aggs"])
+    names = set(state.schema.names)
+    for k in keys:
+        if k not in names:
+            raise TypeError(f"MergeGroupedState: key {k!r} not in state schema")
+    for a in aggs:
+        if a.name not in names:
+            raise TypeError(f"MergeGroupedState: agg {a.name!r} not in state schema")
+    key_domains = params.get("key_domains")
+    if key_domains is not None and len(tuple(key_domains)) != len(keys):
+        raise TypeError("MergeGroupedState: key_domains must match keys")
+    return [Vec(state.item, int(params["max_groups"]))]
+
+
+@op("vec.MergeScalarState", aggregation={"kind": "scalar"})
+def _merge_scalar_state(params: Mapping[str, Any], ins: Sequence[ItemType]) -> Sequence[ItemType]:
+    """MergeScalarState(aggs)(Single⟨aggs⟩, Single⟨aggs⟩) → Single⟨aggs⟩.
+
+    Scalar sibling of MergeGroupedState: combine two Single partial
+    aggregates field-wise with each agg's ``combine_fn``.
+    """
+    state, delta = ins
+    for s in (state, delta):
+        if not is_coll(s) or s.kind.name != "Single":
+            raise TypeError(f"MergeScalarState of non-Single {s.render()}")
+    if state.item != delta.item:
+        raise TypeError("MergeScalarState: state/delta schema mismatch")
+    names = set(state.schema.names)
+    for a in tuple(params["aggs"]):
+        if a.name not in names:
+            raise TypeError(f"MergeScalarState: agg {a.name!r} not in state schema")
+    return [Single(state.schema)]

@@ -14,7 +14,11 @@ Properties needed at 1000+ nodes:
   * **elastic reshard**: restore() takes the *target* pytree structure and
     re-slices shards onto whatever mesh/shape the new job uses — a 2-pod
     checkpoint restores onto 1 pod (pod loss) and vice versa;
-  * **integrity**: content hashes per shard, verified on load;
+  * **integrity**: content hashes per shard, verified on load — a failed
+    verification (or an unreadable manifest) quarantines the step directory
+    (renamed ``step_<N>.corrupt``, matching the PlanStore idiom) and
+    restore falls back to the previous step with a ``warn_event`` instead
+    of raising; ``restore(..., strict=True)`` keeps the raising behavior;
   * **gc**: keep the most recent ``keep`` checkpoints.
 """
 
@@ -84,23 +88,59 @@ class CheckpointManager:
         return final
 
     # -- restore ----------------------------------------------------------------
+    def steps(self) -> List[int]:
+        """Published (non-tmp, non-quarantined) step numbers, ascending."""
+        return sorted(int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+                      if not p.name.endswith(".tmp")
+                      and not p.name.endswith(".corrupt"))
+
     def latest_step(self) -> Optional[int]:
-        steps = sorted(int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
-                       if not p.name.endswith(".tmp"))
+        steps = self.steps()
         return steps[-1] if steps else None
 
     def restore(self, target_tree: Any, step: Optional[int] = None,
-                verify: bool = True) -> Tuple[Any, Dict[str, Any]]:
+                verify: bool = True, strict: bool = False,
+                ) -> Tuple[Any, Dict[str, Any]]:
         """Load into the *structure* (and shardings) of ``target_tree``.
 
         ``target_tree`` may hold arrays or ShapeDtypeStructs; shapes must
         match the saved shapes (elastic resharding = different device
         placement of the same global array, which jax.device_put handles).
+
+        A step whose manifest is unreadable or whose shard hashes mismatch
+        is **quarantined** (directory renamed ``step_<N>.corrupt``) and the
+        restore falls back to the previous published step, emitting a
+        ``ckpt.quarantined`` warn_event — one corrupt snapshot must not
+        brick recovery.  ``strict=True`` restores the old behavior: the
+        first corrupt step raises ``IOError``.
         """
-        step = step if step is not None else self.latest_step()
-        if step is None:
+        if step is not None:
+            candidates = [s for s in self.steps() if s <= step]
+            if step not in candidates:
+                raise FileNotFoundError(
+                    f"no checkpoint for step {step} under {self.dir}")
+            candidates = list(reversed(candidates))
+        else:
+            candidates = list(reversed(self.steps()))
+        if not candidates:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
-        d = self.dir / f"step_{step:08d}"
+
+        last_err: Optional[BaseException] = None
+        for s in candidates:
+            d = self.dir / f"step_{s:08d}"
+            try:
+                return self._load_step(d, s, target_tree, verify)
+            except (IOError, OSError, ValueError, KeyError) as e:
+                if strict:
+                    raise
+                last_err = e
+                self._quarantine(d, s, e)
+        raise IOError(
+            f"every checkpoint under {self.dir} failed to restore; "
+            f"last error: {last_err}")
+
+    def _load_step(self, d: Path, step: int, target_tree: Any,
+                   verify: bool) -> Tuple[Any, Dict[str, Any]]:
         manifest = json.loads((d / "manifest.json").read_text())
 
         if verify:
@@ -127,7 +167,21 @@ class CheckpointManager:
             leaves.append(arr)
         return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]
 
+    def _quarantine(self, d: Path, step: int, error: BaseException) -> None:
+        from ..obs.trace import get_tracer, warn_event
+
+        corrupt = d.with_name(d.name + ".corrupt")
+        if corrupt.exists():
+            shutil.rmtree(corrupt)
+        if d.exists():
+            os.rename(d, corrupt)
+        get_tracer().counter("ckpt.quarantined")
+        warn_event("ckpt.quarantined", step=step, path=str(corrupt),
+                   error=f"{type(error).__name__}: {error}")
+
     def _gc(self) -> None:
-        steps = sorted(p for p in self.dir.glob("step_*") if not p.name.endswith(".tmp"))
+        steps = sorted(p for p in self.dir.glob("step_*")
+                       if not p.name.endswith(".tmp")
+                       and not p.name.endswith(".corrupt"))
         for p in steps[:-self.keep]:
             shutil.rmtree(p)

@@ -284,7 +284,8 @@ class Context:
                 target: str = "local", cache: Any = None,
                 optimize: Optional[str] = None, strategy: Any = None,
                 store: Any = None, memory_budget: Optional[int] = None,
-                guard: bool = True):
+                guard: bool = True, stream_table: Optional[str] = None,
+                batch_rows: Optional[int] = None):
         """Compile through the unified driver — the single entry point for
         every target's declarative lowering path (and the plan cache)."""
         from ..compiler import compile as cvm_compile
@@ -309,6 +310,8 @@ class Context:
             store=store,
             memory_budget=memory_budget,
             guard=guard,
+            stream_table=stream_table,
+            batch_rows=batch_rows,
         )
 
     def _physical_columns(self, name: str) -> Dict[str, np.ndarray]:
@@ -342,12 +345,15 @@ class Context:
                 use_kernels: bool = False, backend: Any = None,
                 target: str = "local",
                 optimize: Optional[str] = None,
-                strategy: Any = None) -> Dict[str, np.ndarray]:
+                strategy: Any = None, stream_table: Optional[str] = None,
+                batch_rows: Optional[int] = None) -> Dict[str, np.ndarray]:
         from ..compiler import get_target
 
         compiled = self.compile(frame, parallel=parallel, use_kernels=use_kernels,
                                 backend=backend, target=target,
-                                optimize=optimize, strategy=strategy)
+                                optimize=optimize, strategy=strategy,
+                                stream_table=stream_table,
+                                batch_rows=batch_rows)
         src = (self.tables if get_target(target).source_kind == "numpy"
                else self.sources())
         (out,) = compiled(src)

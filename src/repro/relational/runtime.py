@@ -640,3 +640,71 @@ def limit(t: VecTable, k: int) -> VecTable:
     c = compact(t)
     keep = jnp.arange(t.capacity) < k
     return VecTable(c.cols, c.valid & keep)
+
+
+# ---------------------------------------------------------------------------
+# incremental (streaming) state: init / merge across micro-batches
+# ---------------------------------------------------------------------------
+#
+# The streaming target (core/passes/lower_stream.py) splits a lowered plan
+# at its terminal aggregation: each micro-batch produces a *partial*
+# aggregate (the batch segment reuses the ordinary grouped/scalar operators
+# above), and the running state is folded forward with the functions below.
+# Every AggSpec is self-decomposable (count combines with sum), so
+# merge-of-partials is itself a grouped aggregation over the concatenated
+# (state, delta) block — the GroupAggDirect dense-bucket accumulators carry
+# straight across micro-batches instead of being recomputed.
+
+
+def _merge_aggs(aggs: Sequence[AggSpec]) -> List[AggSpec]:
+    """The partial-combining AggSpecs: ``fn=combine_fn`` over the partial
+    column itself (sum-of-sums, min-of-mins, sum-of-counts)."""
+    from ..core.expr import Col
+
+    return [AggSpec(a.combine_fn, Col(a.name), a.name) for a in aggs]
+
+
+def empty_grouped_state(template: VecTable) -> VecTable:
+    """The identity element for grouped merge: same schema/capacity as a
+    partial-aggregate block, zero valid rows."""
+    return VecTable({k: jnp.zeros_like(v) for k, v in template.cols.items()},
+                    jnp.zeros_like(template.valid))
+
+
+def merge_grouped_partials(state: VecTable, delta: VecTable,
+                           keys: Sequence[str], aggs: Sequence[AggSpec],
+                           max_groups: int,
+                           key_domains: Optional[Sequence[Tuple[int, int]]] = None,
+                           num_buckets: Optional[int] = None) -> VecTable:
+    """Fold one micro-batch's grouped partial aggregate into the running
+    state (both capacity ``max_groups``) — the streaming step/merge op.
+
+    With catalog ``key_domains`` the merge is the sort-free dense-bucket
+    tier (O(state+delta), the carried GroupAggDirect accumulator); without
+    them it falls back to sort + segment reduction.  Aggregate columns are
+    cast back to the delta's dtypes so integer counts stay integers across
+    arbitrarily many merges.
+    """
+    both = concat([state, delta])
+    merge_aggs = _merge_aggs(aggs)
+    if key_domains is not None and num_buckets is not None:
+        merged = group_agg_direct(both, keys, merge_aggs, max_groups,
+                                  key_domains, int(num_buckets))
+    else:
+        merged = group_agg_sorted(sort_by_key(both, keys), keys, merge_aggs,
+                                  max_groups)
+    cols = {k: merged.cols[k].astype(delta.cols[k].dtype)
+            for k in merged.cols}
+    return VecTable(cols, merged.valid)
+
+
+def merge_scalar_partials(state: Dict[str, jax.Array],
+                          delta: Dict[str, jax.Array],
+                          aggs: Sequence[AggSpec]) -> Dict[str, jax.Array]:
+    """Fold one micro-batch's scalar partial aggregate (Single) into the
+    running state, dtype-preserving (counts stay integral)."""
+    out: Dict[str, jax.Array] = {}
+    for a in aggs:
+        fn = {"sum": jnp.add, "min": jnp.minimum, "max": jnp.maximum}[a.combine_fn]
+        out[a.name] = fn(state[a.name], delta[a.name])
+    return out

@@ -104,6 +104,19 @@ register_point(
     "serve.step", ("raise", "delay"),
     "launch/serve.py serve_loop: before each decode wave (slow-step / "
     "load-shedding simulation)")
+register_point(
+    "stream.batch", ("raise", "delay"),
+    "launch/serve.py StreamConsumer.process: before a micro-batch is folded "
+    "into the incremental state (kills the consumer mid-batch)")
+register_point(
+    "stream.snapshot", ("raise", "delay"),
+    "launch/serve.py StreamConsumer.snapshot: before the CheckpointManager "
+    "save (kills the consumer mid-snapshot; the atomic rename means the "
+    "previous snapshot survives)")
+register_point(
+    "stream.restore", ("raise", "delay"),
+    "launch/serve.py StreamConsumer.restore: before the checkpoint load "
+    "(a recovery that itself fails)")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,210 @@
+"""Checkpointing and fault tolerance: the durability half of recovery.
+
+Covers ``distributed/checkpoint.py`` (atomic save/restore round-trips,
+elastic resharding, the keep-``N`` gc policy, and the corruption
+quarantine + previous-step fallback that keeps one bad snapshot from
+bricking recovery) and ``distributed/fault.py``'s ``StepRunner``
+(restore-on-failure with bounded retries).  The streaming consumer built
+on top of these is exercised end-to-end in test_stream.py.
+"""
+
+from __future__ import annotations
+
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.distributed.checkpoint import CheckpointManager
+from repro.distributed.fault import StepRunner
+from repro.obs import tracing
+
+
+def small_tree(scale: float = 1.0):
+    return {
+        "cols": {
+            "region": (np.arange(8, dtype=np.int32) * int(scale)),
+            "rev": np.linspace(0.0, 7.0, 8).astype(np.float32) * scale,
+        },
+        "valid": np.array([True] * 6 + [False] * 2),
+        "count": np.float64(42.0 * scale),
+    }
+
+
+def assert_tree_equal(got, want):
+    assert set(got) == set(want)
+    np.testing.assert_array_equal(got["valid"], want["valid"])
+    np.testing.assert_allclose(np.asarray(got["count"]), want["count"])
+    for k in want["cols"]:
+        np.testing.assert_allclose(got["cols"][k], want["cols"][k])
+
+
+class TestRoundTrip:
+    def test_save_restore_round_trip_with_extra(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, n_shards=2, keep=3)
+        tree = small_tree()
+        mgr.save(5, tree, extra={"seq": 5, "watermark": 2025.0})
+        got, extra = mgr.restore(small_tree(0.0))
+        assert_tree_equal(got, tree)
+        assert extra["seq"] == 5
+        assert extra["watermark"] == 2025.0
+
+    def test_restore_specific_step(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, n_shards=2, keep=5)
+        mgr.save(1, small_tree(1.0), extra={"seq": 1})
+        mgr.save(2, small_tree(2.0), extra={"seq": 2})
+        got, extra = mgr.restore(small_tree(0.0), step=1)
+        assert_tree_equal(got, small_tree(1.0))
+        assert extra["seq"] == 1
+        with pytest.raises(FileNotFoundError):
+            mgr.restore(small_tree(0.0), step=9)
+
+    def test_steps_exclude_tmp_and_corrupt(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, n_shards=1, keep=5)
+        mgr.save(1, small_tree())
+        (tmp_path / "step_00000002.tmp").mkdir()
+        (tmp_path / "step_00000003.corrupt").mkdir()
+        assert mgr.steps() == [1]
+        assert mgr.latest_step() == 1
+
+    def test_restore_empty_dir_raises(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        with pytest.raises(FileNotFoundError):
+            mgr.restore(small_tree(0.0))
+
+
+class TestElasticReshard:
+    def test_two_shard_save_restores_under_one_shard_manager(self, tmp_path):
+        """A 2-pod checkpoint restores onto a 1-pod job: the shard count is
+        read from the manifest, not the restoring manager."""
+        tree = {"w": np.arange(64, dtype=np.float32).reshape(8, 8),
+                "b": np.float32(3.0)}
+        CheckpointManager(tmp_path, n_shards=2, keep=3).save(10, tree)
+        step_dir = tmp_path / "step_00000010"
+        assert (step_dir / "shard_0.npz").exists()
+        assert (step_dir / "shard_1.npz").exists()
+        got, _ = CheckpointManager(tmp_path, n_shards=1).restore(
+            {"w": np.zeros((8, 8), np.float32), "b": np.float32(0.0)})
+        np.testing.assert_allclose(got["w"], tree["w"])
+        np.testing.assert_allclose(np.asarray(got["b"]), 3.0)
+
+    def test_shape_mismatch_is_an_error(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, n_shards=2)
+        mgr.save(1, {"w": np.zeros((8,), np.float32)})
+        with pytest.raises(IOError):
+            # strict=False still raises once every candidate is exhausted
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                mgr.restore({"w": np.zeros((9,), np.float32)})
+
+
+class TestGc:
+    def test_keep_policy_drops_oldest(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, n_shards=1, keep=3)
+        for s in range(1, 6):
+            mgr.save(s, small_tree(float(s)))
+        assert mgr.steps() == [3, 4, 5]
+        got, _ = mgr.restore(small_tree(0.0))
+        assert_tree_equal(got, small_tree(5.0))
+
+    def test_gc_spares_quarantined_dirs(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, n_shards=1, keep=2)
+        (tmp_path / "step_00000001.corrupt").mkdir()
+        for s in range(2, 6):
+            mgr.save(s, small_tree())
+        assert (tmp_path / "step_00000001.corrupt").exists()
+        assert mgr.steps() == [4, 5]
+
+
+def corrupt_shard(tmp_path, step: int) -> None:
+    shard = tmp_path / f"step_{step:08d}" / "shard_0.npz"
+    shard.write_bytes(shard.read_bytes()[:-7] + b"garbage")
+
+
+class TestQuarantine:
+    def test_corrupt_latest_falls_back_to_previous(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, n_shards=1, keep=5)
+        mgr.save(1, small_tree(1.0), extra={"seq": 1})
+        mgr.save(2, small_tree(2.0), extra={"seq": 2})
+        corrupt_shard(tmp_path, 2)
+        with tracing() as tr, warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            got, extra = mgr.restore(small_tree(0.0))
+        assert_tree_equal(got, small_tree(1.0))
+        assert extra["seq"] == 1
+        # the bad step is quarantined, not deleted (post-mortem evidence)
+        assert (tmp_path / "step_00000002.corrupt").exists()
+        assert mgr.steps() == [1]
+        assert tr.counters["ckpt.quarantined"] == 1
+
+    def test_unreadable_manifest_falls_back(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, n_shards=1, keep=5)
+        mgr.save(1, small_tree(1.0), extra={"seq": 1})
+        mgr.save(2, small_tree(2.0), extra={"seq": 2})
+        (tmp_path / "step_00000002" / "manifest.json").write_text("{not json")
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            got, extra = mgr.restore(small_tree(0.0))
+        assert extra["seq"] == 1
+
+    def test_strict_restore_still_raises(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, n_shards=1, keep=5)
+        mgr.save(1, small_tree(1.0))
+        mgr.save(2, small_tree(2.0))
+        corrupt_shard(tmp_path, 2)
+        with pytest.raises(IOError, match="hash mismatch"):
+            mgr.restore(small_tree(0.0), strict=True)
+        # strict never quarantines — the evidence stays in place
+        assert (tmp_path / "step_00000002").exists()
+
+    def test_every_step_corrupt_raises(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, n_shards=1, keep=5)
+        mgr.save(1, small_tree(1.0))
+        corrupt_shard(tmp_path, 1)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            with pytest.raises(IOError, match="failed to restore"):
+                mgr.restore(small_tree(0.0))
+        assert (tmp_path / "step_00000001.corrupt").exists()
+
+
+class TestStepRunner:
+    """Restore-on-failure: a mid-run crash rewinds state *and* the step
+    counter to the last checkpoint, so with deterministic batches the
+    final state is exactly the no-failure result."""
+
+    @staticmethod
+    def constant_batches():
+        while True:
+            yield np.float32(1.0)
+
+    def test_failure_restores_and_converges(self, tmp_path):
+        ckpt = CheckpointManager(tmp_path, n_shards=1, keep=3)
+        calls = {"n": 0}
+        failures = []
+
+        def step_fn(acc, batch):
+            calls["n"] += 1
+            if calls["n"] == 8:  # crash once, after the step-6 checkpoint
+                raise RuntimeError("device lost")
+            return acc + batch, {"loss": float(np.sum(acc))}
+
+        runner = StepRunner(step_fn, ckpt, ckpt_every=2, max_retries=3)
+        state = runner.run((np.zeros(4, np.float32),), self.constant_batches(),
+                           num_steps=10,
+                           on_failure=lambda step, e: failures.append(step))
+        np.testing.assert_allclose(state[0], np.full(4, 10.0))
+        assert failures == [7]
+        assert len(runner.history) >= 10
+
+    def test_retry_budget_exhaustion_reraises(self, tmp_path):
+        ckpt = CheckpointManager(tmp_path, n_shards=1, keep=3)
+
+        def step_fn(acc, batch):
+            raise RuntimeError("permanently poisoned")
+
+        runner = StepRunner(step_fn, ckpt, ckpt_every=2, max_retries=2)
+        with pytest.raises(RuntimeError, match="poisoned"):
+            runner.run((np.zeros(4, np.float32),), self.constant_batches(),
+                       num_steps=10)

@@ -117,7 +117,8 @@ class TestInjectionRegistry:
         points = registered_points()
         for name in ["driver.pass", "store.load", "store.save",
                      "backend.compile", "backend.execute", "spmd.shard",
-                     "serve.step"]:
+                     "serve.step", "stream.batch", "stream.snapshot",
+                     "stream.restore"]:
             assert name in points, sorted(points)
 
     def test_unknown_point_and_mode_rejected(self):
